@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md roofline tables from exp/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir exp/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTE = {
+    "compute": "raise useful-FLOP ratio (remat policy / head-padding / capacity waste)",
+    "memory": "cut bytes/step: weight reuse across tokens (batching) or compressed KV",
+    "collective": "reshard to kill all-gather/all-reduce volume; overlap with compute",
+}
+
+
+def load(dirname: str):
+    rows = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(dirname, "*.json")))]
+    return ([r for r in rows if r["status"] == "ok"],
+            [r for r in rows if r["status"] == "skipped"],
+            [r for r in rows if r["status"] == "failed"])
+
+
+def fmt_table(rows, mesh: str) -> str:
+    hdr = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | "
+           "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | peak mem/dev (GiB) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_mem_gb']:.1f} |\n")
+    return "".join(out)
+
+
+def fmt_notes(rows, mesh: str) -> str:
+    out = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        out.append(f"- **{r['arch']} x {r['shape']}** — {r['bottleneck']}-bound; "
+                   f"to move the dominant term: {NOTE[r['bottleneck']]}.\n")
+    return "".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="exp/dryrun")
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    ok, sk, fail = load(args.dir)
+    print(f"### Single-pod (16x16 = 256 chips)\n\n{fmt_table(ok, '16x16')}")
+    print(f"\n### Multi-pod (2x16x16 = 512 chips)\n\n{fmt_table(ok, '2x16x16')}")
+    if args.notes:
+        print("\n### Per-cell notes\n\n" + fmt_notes(ok, "16x16"))
+    print("\n### Skipped cells\n")
+    for r in sorted(sk, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"- {r['arch']} x {r['shape']} x {r['mesh']}: {r['reason']}")
+    if fail:
+        print("\n### FAILED\n")
+        for r in fail:
+            print(f"- {r['arch']} x {r['shape']} x {r['mesh']}: {r['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  bench_fig1_raccuracy        Fig. 1: R-ACC of approximate leverage scores
+  bench_fig2_runtime_scaling  Fig. 2: runtime vs n (BLESS ~flat in n)
+  bench_table1_complexity     Table 1: |J| ~ d_eff(lam), runtime ~ 1/lam
+  bench_fig3_lambda_stability Fig. 3: error across lam_falkon grid
+  bench_fig45_falkon          Fig. 4/5: FALKON-BLESS vs FALKON-UNI per iter
+  bench_lm_steps              framework: smoke-scale train/decode step times
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
+CPU-scale sizes; every timing is post-warmup (jit cache hot).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (bless, bless_r, exact_rls, falkon_fit, make_kernel,
+                        recursive_rls, squeak, two_pass, uniform_centers)
+from repro.core.leverage import approx_rls_all
+
+_ROWS: list[str] = []
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    row = f"{name},{us:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def _data(n: int, d: int = 10, seed: int = 0, clusters: int = 12):
+    key = jax.random.PRNGKey(seed)
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (clusters, d)) * 3.0
+    assign = jax.random.randint(ka, (n,), 0, clusters)
+    return centers[assign] + 0.5 * jax.random.normal(kn, (n, d))
+
+
+def _classif(n: int, n_test: int, d: int = 8, seed: int = 1):
+    """One ground-truth rule; train/test split from the same distribution."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n + n_test, d))
+    w = jax.random.normal(k2, (d,))
+    margin = jnp.tanh(x @ w + 0.7 * jnp.sin(2 * x[:, 0]) * x[:, 1])
+    y = jnp.sign(margin + 0.3 * jax.random.normal(k3, (n + n_test,)))
+    y = jnp.where(y == 0, 1.0, y)
+    return x[:n], y[:n], x[n:], y[n:]
+
+
+def _racc_stats(scores, ell):
+    r = np.asarray(scores / ell)
+    return (float(r.mean()), float(np.quantile(r, 0.05)), float(np.quantile(r, 0.95)))
+
+
+def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3) -> None:
+    x = _data(n)
+    kern = make_kernel("gaussian", sigma=2.0)
+    ell = exact_rls(kern, x, lam)
+    key = jax.random.PRNGKey(0)
+    lamj = jnp.asarray(lam)
+
+    def timed(fn):
+        fn()  # warmup (jit)
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.idx if hasattr(out, "idx") else out)
+        return out, (time.perf_counter() - t0) * 1e6
+
+    res, us = timed(lambda: bless(key, x, kern, lam, q2=4.0, q1=4.0))
+    m, q5, q95 = _racc_stats(res.scores(kern, x), ell)
+    emit("fig1.bless", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
+
+    res, us = timed(lambda: bless_r(key, x, kern, lam, q2=4.0))
+    m, q5, q95 = _racc_stats(res.scores(kern, x), ell)
+    emit("fig1.bless_r", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
+
+    mref = res.final.m_h
+    cs, us = timed(lambda: squeak(key, x, kern, lam, m_cap=mref))
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    emit("fig1.squeak", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
+
+    cs, us = timed(lambda: recursive_rls(key, x, kern, lam, m_cap=mref))
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    emit("fig1.rrls", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
+
+    cs, us = timed(lambda: uniform_centers(key, n, mref))
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    emit("fig1.uniform", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={mref}")
+
+
+def bench_fig2_runtime_scaling(lam: float = 2e-3) -> None:
+    kern = make_kernel("gaussian", sigma=2.0)
+    key = jax.random.PRNGKey(0)
+    for n in (1000, 2000, 4000, 8000):
+        x = _data(n)
+        for name, fn in (
+            ("bless", lambda: bless(key, x, kern, lam, q2=3.0, q1=3.0)),
+            ("squeak", lambda: squeak(key, x, kern, lam, m_cap=600)),
+            ("rrls", lambda: recursive_rls(key, x, kern, lam, m_cap=600)),
+        ):
+            fn()  # warmup compiles for this n
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out.final.centers.idx if hasattr(out, "final") else out.idx)
+            emit(f"fig2.{name}.n{n}", (time.perf_counter() - t0) * 1e6, f"n={n}")
+
+
+def bench_table1_complexity() -> None:
+    """|J_H| tracks q2*d_eff(lam) across lam — the Table 1 / Thm 1(b) claim."""
+    n = 2000
+    x = _data(n)
+    kern = make_kernel("gaussian", sigma=2.0)
+    key = jax.random.PRNGKey(0)
+    q2 = 3.0
+    for lam in (1e-2, 3e-3, 1e-3):
+        deff = float(jnp.sum(exact_rls(kern, x, lam)))
+        t0 = time.perf_counter()
+        res = bless(key, x, kern, lam, q2=q2, q1=3.0)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"table1.lam{lam:g}", us,
+             f"deff={deff:.1f};M={res.final.m_h};q2*deff={q2 * deff:.1f};H={len(res.levels)}")
+
+
+def bench_fig45_falkon(n: int = 3000, m_target: int = 250) -> None:
+    """Error per CG iteration: BLESS centers+weights vs uniform centers."""
+    x, y, xte, yte = _classif(n, 800)
+    kern = make_kernel("gaussian", sigma=2.0)
+    lam_falkon, lam_bless = 1e-5, 1e-3
+
+    res = bless(jax.random.PRNGKey(0), x, kern, lam_bless, q2=3.0, m_cap=m_target)
+    mh = res.final.m_h
+    idx = res.final.centers.idx[:mh]
+    a = res.final.centers.weight[:mh]
+
+    def err_curve(centers, a_diag, tag):
+        errs = []
+
+        def cb(i, model):
+            pred = jnp.sign(model.predict(xte))
+            errs.append(float(jnp.mean(pred != yte)))
+
+        t0 = time.perf_counter()
+        falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20, callback=cb)
+        us = (time.perf_counter() - t0) * 1e6
+        best5 = min(errs[:5])
+        emit(f"fig45.{tag}", us, f"err@5={best5:.4f};err@20={errs[-1]:.4f};M={centers.shape[0]}")
+        return errs
+
+    err_curve(x[idx], a, "falkon_bless")
+    ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
+    err_curve(x[ku], None, "falkon_uni")
+
+
+def bench_fig3_lambda_stability(n: int = 2000) -> None:
+    x, y, xte, yte = _classif(n, 600)
+    kern = make_kernel("gaussian", sigma=2.0)
+    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=250)
+    mh = res.final.m_h
+    zc, a = x[res.final.centers.idx[:mh]], res.final.centers.weight[:mh]
+    ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
+    for lam in (1e-3, 1e-5, 1e-7):
+        for tag, (c, ad) in {"bless": (zc, a), "uni": (x[ku], None)}.items():
+            t0 = time.perf_counter()
+            model = falkon_fit(kern, x, y, c, lam, a_diag=ad, iters=5)
+            err = float(jnp.mean(jnp.sign(model.predict(xte)) != yte))
+            emit(f"fig3.{tag}.lam{lam:g}", (time.perf_counter() - t0) * 1e6,
+                 f"cerr@5it={err:.4f}")
+
+
+def bench_lm_steps() -> None:
+    """Smoke-scale per-arch step timing (framework sanity, not paper)."""
+    from repro.configs import get_config, list_archs, smoke
+    from repro.data import TokenPipeline
+    from repro.optim import OptConfig
+    from repro.training import make_train_step, train_state_init
+
+    for name in list_archs():
+        cfg = smoke(get_config(name))
+        state = train_state_init(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, OptConfig(), loss_chunks=4))
+        pipe = TokenPipeline(cfg.vocab_size, batch=4, seq=64)
+        if not cfg.embed_inputs:
+            mk = lambda s: {"frames": jnp.zeros((4, 64, cfg.d_model), jnp.bfloat16),
+                            "labels": pipe.batch_at(s)["labels"]}
+        elif cfg.pos == "mrope":
+            def mk(s):
+                b = pipe.batch_at(s)
+                p = jnp.broadcast_to(jnp.arange(64), (4, 64))
+                b["mrope_positions"] = jnp.stack([p, p, p], 1)
+                b["pixel_embeds"] = jnp.zeros((4, cfg.extra_image_tokens, cfg.d_model),
+                                              jnp.bfloat16)
+                return b
+        else:
+            mk = pipe.batch_at
+        state, _ = step(state, mk(0))  # compile
+        t0 = time.perf_counter()
+        state, metrics = step(state, mk(1))
+        jax.block_until_ready(metrics["loss"])
+        emit(f"lm.train_step.{name}", (time.perf_counter() - t0) * 1e6,
+             f"loss={float(metrics['loss']):.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fig1_raccuracy()
+    bench_fig2_runtime_scaling()
+    bench_table1_complexity()
+    bench_fig45_falkon()
+    bench_fig3_lambda_stability()
+    bench_lm_steps()
+
+
+if __name__ == "__main__":
+    main()

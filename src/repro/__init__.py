@@ -1,0 +1,7 @@
+"""repro — BLESS / FALKON-BLESS (NeurIPS 2018) as a production JAX framework.
+
+Layers: core (the paper), kernels (Pallas TPU hot-spots), models+configs
+(assigned architecture zoo), data/optim/training/serving/checkpoint/runtime
+(substrates), sharding+launch (512-chip SPMD distribution + dry-run).
+"""
+__version__ = "1.0.0"

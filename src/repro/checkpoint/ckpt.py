@@ -1,0 +1,135 @@
+"""Sharded, manifest-based checkpointing with async writes and cross-mesh
+(elastic) restore.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf (keyed by the
+flattened tree path). Writes go to a temp dir and are renamed atomically;
+``latest_step`` only ever sees complete checkpoints — a mid-write failure
+loses at most one checkpoint, never corrupts one (the restart guarantee).
+
+Restore is *mesh-free*: leaves come back as host numpy and are device_put
+with whatever sharding the (possibly different-sized) new mesh prescribes —
+that is the elastic-rescale path. On a multi-host pod each process would
+write only its addressable shards (the manifest records per-leaf global
+shapes already); single-process CPU writes everything.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for i, (key, arr) in enumerate(sorted(flat.items())):
+        fname = f"leaf_{i:05d}.npy"
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":  # numpy can't round-trip ml_dtypes natively
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": dtype}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, *, step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[int, Any]:
+    """Restore into the *structure* of ``template``; ``shardings`` (same
+    structure, NamedSharding or None leaves) places leaves on the new mesh."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoint under {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_by_key = manifest["leaves"]
+    flat_template = jax.tree_util.tree_flatten_with_path(template)
+    flat_shard = (jax.tree_util.tree_flatten_with_path(shardings)[0]
+                  if shardings is not None else None)
+    out = []
+    for i, (pth, leaf) in enumerate(flat_template[0]):
+        key = _SEP.join(_part(p) for p in pth)
+        rec = leaves_by_key[key]
+        arr = np.load(os.path.join(path, rec["file"]))
+        if rec["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        sh = flat_shard[i][1] if flat_shard is not None else None
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(flat_template[1], out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint IO with the next training steps (one in flight)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async write
+
+        def _work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (latest_step(self.ckpt_dir),) if s is not None)
+        all_steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+                           if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in all_steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

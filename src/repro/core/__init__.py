@@ -1,0 +1,36 @@
+"""Core paper contribution: BLESS / BLESS-R leverage score sampling and the
+FALKON-BLESS kernel ridge regression solver, plus the baselines they are
+measured against."""
+from .gram import Kernel, make_kernel, blocked_cross, sq_dists
+from .leverage import (
+    CenterSet,
+    approx_rls,
+    approx_rls_all,
+    effective_dim,
+    exact_rls,
+    uniform_center_set,
+)
+from .bless import BlessLevel, BlessResult, bless, bless_r, lam_ladder, theory_constants
+from .baselines import recursive_rls, squeak, two_pass, uniform_centers
+from .falkon import (
+    FalkonModel,
+    Preconditioner,
+    cg,
+    falkon_bless_fit,
+    falkon_fit,
+    local_knm_quadratic,
+    local_knm_t,
+    make_preconditioner,
+)
+from .nystrom import exact_krr, nystrom_krr
+
+__all__ = [
+    "Kernel", "make_kernel", "blocked_cross", "sq_dists",
+    "CenterSet", "approx_rls", "approx_rls_all", "effective_dim", "exact_rls",
+    "uniform_center_set",
+    "BlessLevel", "BlessResult", "bless", "bless_r", "lam_ladder", "theory_constants",
+    "recursive_rls", "squeak", "two_pass", "uniform_centers",
+    "FalkonModel", "Preconditioner", "cg", "falkon_bless_fit", "falkon_fit",
+    "local_knm_quadratic", "local_knm_t", "make_preconditioner",
+    "exact_krr", "nystrom_krr",
+]

@@ -1,0 +1,131 @@
+"""Competing leverage-score samplers from the paper's Sec. 2.3.
+
+These exist so Table 1 / Fig. 1 / Fig. 2 analogues can be benchmarked against
+BLESS with a shared scoring backend (Eq. 3 via ``approx_rls``):
+
+  * uniform          — [5]  (no scores; the fastest, highest-variance option)
+  * two-pass         — [6]  El Alaoui & Mahoney
+  * RECURSIVE-RLS    — [9]  Musco & Musco
+  * SQUEAK           — [8]  Calandriello, Lazaric & Valko
+
+Implementations follow the paper's unified notation (Sec. 2.2/2.3): each
+method is a different schedule of ``L_J(U, lam) -> J'``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .bless import _multinomial, _pow2
+from .gram import Kernel
+from .leverage import CenterSet, approx_rls, uniform_center_set
+
+Array = jax.Array
+
+
+def uniform_centers(key: Array, n: int, m: int) -> CenterSet:
+    """Uniform column sampling [5]; A = (M/n) I (see uniform_center_set)."""
+    idx = jax.random.randint(key, (m,), 0, n)
+    return uniform_center_set(idx, n, _pow2(m))
+
+
+def _resample(key: Array, x: Array, u_idx: Array, u_mask: Array, centers: CenterSet,
+              kernel: Kernel, lam: float, m_out: int, n: int) -> CenterSet:
+    """One leverage-score sampling round: L_{centers}(U, lam) -> J' (Eq. 5)."""
+    s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam))
+    s = jnp.where(u_mask, s, 0.0)
+    p = s / jnp.maximum(jnp.sum(s), 1e-30)
+    r_h = int(jnp.sum(u_mask))
+    mbuf = _pow2(m_out)
+    pos = _multinomial(key, p, mbuf)
+    j_mask = jnp.arange(mbuf) < m_out
+    w = jnp.where(j_mask, (r_h * m_out / n) * p[pos], 1.0)
+    return CenterSet(
+        idx=u_idx[pos].astype(jnp.int32),
+        weight=w.astype(jnp.float32),
+        mask=j_mask,
+        count=jnp.asarray(m_out, jnp.int32),
+    )
+
+
+def two_pass(key: Array, x: Array, kernel: Kernel, lam: float, *,
+             m1: int | None = None, m2: int) -> CenterSet:
+    """Two-pass sampling [6]: uniform J1 (size ~1/lam), then L_{J1}([n], lam)."""
+    n = x.shape[0]
+    m1 = m1 or min(n, int(math.ceil(kernel.kappa_sq / lam)))
+    k1, k2 = jax.random.split(key)
+    j1 = uniform_centers(k1, n, m1)
+    u_idx = jnp.arange(_pow2(n), dtype=jnp.int32) % n
+    u_mask = jnp.arange(_pow2(n)) < n
+    return _resample(k2, x, u_idx, u_mask, j1, kernel, lam, m2, n)
+
+
+def recursive_rls(key: Array, x: Array, kernel: Kernel, lam: float, *,
+                  q2: float = 2.0, depth: int | None = None,
+                  m_cap: int | None = None) -> CenterSet:
+    """RECURSIVE-RLS [9]: nested uniform U_1 c U_2 c ... c U_H = [n],
+    |U_h| = n / 2^(H-h);  J_1 = U_1;  L_{J_h}(U_{h+1}, lam) -> J_{h+1}."""
+    n = x.shape[0]
+    depth = depth or max(1, int(math.log2(max(2, n * lam))))
+    perm = jax.random.permutation(key, n).astype(jnp.int32)
+    sizes = [max(8, n // 2**(depth - h)) for h in range(depth)] + [n]
+    j = uniform_center_set(perm[: sizes[0]], n, _pow2(sizes[0]))
+    for h, r in enumerate(sizes[1:]):
+        key, kh = jax.random.split(key)
+        rbuf = _pow2(r)
+        u_idx = perm[jnp.arange(rbuf) % n][: rbuf]
+        u_mask = jnp.arange(rbuf) < r
+        # m_out ~ q2 * estimated d_eff from current scores
+        s = approx_rls(kernel, x[u_idx], u_mask, x, j, jnp.asarray(lam))
+        d_est = float(n / r * jnp.sum(jnp.where(u_mask, s, 0.0)))
+        m_out = max(8, int(math.ceil(q2 * d_est)))
+        if m_cap is not None:
+            m_out = min(m_out, m_cap)
+        j = _resample(kh, x, u_idx, u_mask, j, kernel, lam, m_out, n)
+    return j
+
+
+def squeak(key: Array, x: Array, kernel: Kernel, lam: float, *,
+           n_chunks: int | None = None, qbar: float = 2.0,
+           m_cap: int | None = None) -> CenterSet:
+    """SQUEAK [8]: stream [n] in H chunks; merge-and-rescore
+    L_{J_h u U_{h+1}}(J_h u U_{h+1}, lam) with Bernoulli thinning."""
+    n = x.shape[0]
+    n_chunks = n_chunks or max(2, int(math.sqrt(max(4, n * lam))))
+    perm = jax.random.permutation(key, n).astype(jnp.int32)
+    chunk = n // n_chunks
+    j_idx = perm[:chunk]
+    j_w = jnp.full((chunk,), chunk / n, jnp.float32)
+    for h in range(1, n_chunks):
+        key, kh = jax.random.split(key)
+        u_new = perm[h * chunk: (h + 1) * chunk]
+        cand = jnp.concatenate([j_idx, u_new])
+        cand_w = jnp.concatenate([j_w, jnp.full((u_new.shape[0],), (cand.shape[0]) / n, jnp.float32)])
+        cbuf = _pow2(cand.shape[0])
+        pad = cbuf - cand.shape[0]
+        cs = CenterSet(
+            idx=jnp.pad(cand, (0, pad)),
+            weight=jnp.pad(cand_w, (0, pad), constant_values=1.0),
+            mask=jnp.arange(cbuf) < cand.shape[0],
+            count=jnp.asarray(cand.shape[0], jnp.int32),
+        )
+        s = approx_rls(kernel, x[cs.idx], cs.mask, x, cs, jnp.asarray(lam))
+        p = jnp.minimum(qbar * s, 1.0)
+        keep = (jax.random.uniform(kh, (cbuf,)) < p) & cs.mask
+        if m_cap is not None and int(jnp.sum(keep)) > m_cap:
+            top = jnp.argsort(jnp.where(keep, -p, jnp.inf))[:m_cap]
+            keep = jnp.zeros_like(keep).at[top].set(True) & keep
+        sel = jnp.where(keep, jnp.arange(cbuf), cbuf)
+        order = jnp.argsort(sel)[: int(jnp.sum(keep))]
+        j_idx = cs.idx[order]
+        j_w = p[order]  # importance weight: kept w.p. p -> A_jj = p_j
+    mbuf = _pow2(j_idx.shape[0])
+    pad = mbuf - j_idx.shape[0]
+    return CenterSet(
+        idx=jnp.pad(j_idx, (0, pad)),
+        weight=jnp.pad(j_w, (0, pad), constant_values=1.0),
+        mask=jnp.arange(mbuf) < j_idx.shape[0],
+        count=jnp.asarray(j_idx.shape[0], jnp.int32),
+    )

@@ -1,0 +1,249 @@
+"""FALKON with generalized (BLESS-weighted) preconditioner — paper Sec. 3 / App. B.
+
+Solves Nystrom-KRR
+
+    alpha = (K_nM^T K_nM + lam n K_MM)^+ K_nM^T y        (Eq. 13, lam*n conv.)
+
+by conjugate gradient on the preconditioned system (Def. 3)
+
+    W beta = b,   W = B^T (K_nM^T K_nM + lam n K_MM) B,  b = B^T K_nM^T y,
+
+with the generalized preconditioner of Def. 2 / Eq. (15):
+
+    B = (1/sqrt(n)) A^{-1/2} T^{-1} R^{-1},
+    T = chol_u(A^{-1/2} K_MM A^{-1/2}),   R = chol_u(T T^T / M + lam I)
+
+so that B B^T = (n/M K_MM A^{-1} K_MM + lam n K_MM)^{-1}.
+
+The CG matvec never materializes K_nM: ``knm_op`` is an abstract operator —
+the local pure-jnp streamer here, the Pallas fused kernel
+(repro.kernels.falkon_matvec) on TPU, or the shard_map data-parallel one in
+core/distributed.py. All three share this file's CG loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .gram import Kernel
+from .leverage import CenterSet, _chol_with_jitter
+
+Array = jax.Array
+
+
+class Preconditioner(NamedTuple):
+    """Factors of Def. 2, Example 1.3 (eigendecomposition branch).
+
+    BLESS samples centers *with replacement*, so K_MM is routinely rank
+    deficient (duplicate rows); the eigh-based partial isometry Q with rank
+    truncation is the paper's own answer (Def. 2 requires only Q^T Q = I,
+    q <= M) and is fp32-robust where the Cholesky branch explodes.
+    """
+
+    q_iso: Array  # (M, q) partial isometry
+    t_diag: Array  # (q,)  T = diag(sqrt(eig))
+    r_diag: Array  # (q,)  R = diag(sqrt(eig/M + lam))
+    inv_sqrt_a: Array  # (M,) diag(A)^{-1/2}
+    n: int
+
+    def apply(self, v: Array) -> Array:
+        """B v = (1/sqrt n) A^{-1/2} Q T^{-1} R^{-1} v,  v (q,)."""
+        u = self.q_iso @ (v / (self.t_diag * self.r_diag))
+        return self.inv_sqrt_a * u / jnp.sqrt(self.n)
+
+    def apply_t(self, v: Array) -> Array:
+        """B^T v,  v (M,) -> (q,)."""
+        u = self.q_iso.T @ (self.inv_sqrt_a * v / jnp.sqrt(self.n))
+        return u / (self.t_diag * self.r_diag)
+
+
+def make_preconditioner(kernel: Kernel, z: Array, a_diag: Array, lam: float, n: int,
+                        *, rank_tol: float = 1e-5) -> Preconditioner:
+    """Def. 2 factors for centers z (M, d) with weights diag(A) = a_diag.
+
+    eigh of A^{-1/2} K_MM A^{-1/2}; eigenvalues below rank_tol * max are
+    dropped (q = numerical rank), exactly Example 1.3 with q = rank(K_MM).
+    """
+    m = z.shape[0]
+    kmm = kernel.cross(z, z).astype(jnp.float32)
+    inv_sqrt_a = (1.0 / jnp.sqrt(a_diag)).astype(jnp.float32)
+    kt = kmm * (inv_sqrt_a[:, None] * inv_sqrt_a[None, :])
+    eig, vec = jnp.linalg.eigh(kt)
+    floor = jnp.maximum(eig[-1], 1e-30) * rank_tol
+    keep = eig > floor
+    # jit-friendly fixed shapes: keep all M columns but neutralize dropped
+    # directions (T entry -> 1, Q column -> 0): B then annihilates them.
+    t_diag = jnp.sqrt(jnp.where(keep, eig, 1.0))
+    r_diag = jnp.sqrt(jnp.where(keep, eig / m + lam, 1.0))
+    q_iso = vec * keep[None, :].astype(vec.dtype)
+    return Preconditioner(q_iso, t_diag, r_diag, inv_sqrt_a, n)
+
+
+# ---------------------------------------------------------------------------
+# K_nM operators
+# ---------------------------------------------------------------------------
+
+KnmOp = Callable[[Array], tuple[Array, Array]]
+# v (M,) -> (K_nM^T K_nM v  (M,),  K_nM^T y (M,))  -- the second returned once
+
+
+def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192) -> Callable[[Array], Array]:
+    """v -> K_nM^T (K_nM v), streaming x in row blocks (pure-jnp reference)."""
+    n, m = x.shape[0], z.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    nb = xp.shape[0] // block
+    valid = (jnp.arange(nb * block) < n).reshape(nb, block)
+
+    def op(v: Array) -> Array:
+        def body(carry, args):
+            xb, mb = args
+            g = kernel.cross(xb, z) * mb[:, None]
+            return carry + g.T @ (g @ v), None
+
+        out, _ = jax.lax.scan(body, jnp.zeros((m,), v.dtype),
+                              (xp.reshape(nb, block, -1), valid))
+        return out
+
+    return op
+
+
+def local_knm_t(kernel: Kernel, x: Array, z: Array, y: Array, *, block: int = 8192) -> Array:
+    """K_nM^T y, streamed."""
+    n, m = x.shape[0], z.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    yp = jnp.pad(y, (0, pad))
+    nb = xp.shape[0] // block
+
+    def body(carry, args):
+        xb, yb = args
+        return carry + kernel.cross(xb, z).T @ yb, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((m,), x.dtype),
+                          (xp.reshape(nb, block, -1), yp.reshape(nb, block)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradient
+# ---------------------------------------------------------------------------
+
+
+def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
+       callback: Callable[[int, Array], None] | None = None) -> Array:
+    """Plain CG on SPD ``matvec``; fixed iteration count (paper uses t ~ log n).
+
+    With ``callback`` the loop runs on host (per-iteration metrics for the
+    Fig. 4/5 analogues); otherwise it is a single jitted lax.fori_loop.
+    """
+    if callback is not None:
+        beta = jnp.zeros_like(b)
+        r = b
+        p = r
+        rs = jnp.dot(r, r)
+        for i in range(iters):
+            ap = matvec(p)
+            alpha = rs / jnp.maximum(jnp.dot(p, ap), 1e-30)
+            beta = beta + alpha * p
+            r = r - alpha * ap
+            rs_new = jnp.dot(r, r)
+            p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+            rs = rs_new
+            callback(i, beta)
+        return beta
+
+    def body(_, state):
+        beta, r, p, rs = state
+        ap = matvec(p)
+        alpha = rs / jnp.maximum(jnp.dot(p, ap), 1e-30)
+        beta = beta + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return beta, r, p, rs_new
+
+    init = (jnp.zeros_like(b), b, b, jnp.dot(b, b))
+    return jax.lax.fori_loop(0, iters, body, init)[0]
+
+
+# ---------------------------------------------------------------------------
+# FALKON estimator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FalkonModel:
+    centers: Array  # (M, d)
+    alpha: Array  # (M,)
+    kernel: Kernel
+
+    def predict(self, x: Array, *, block: int = 8192) -> Array:
+        n = x.shape[0]
+        pad = (-n) % block
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        out = jax.lax.map(
+            lambda xb: self.kernel.cross(xb, self.centers) @ self.alpha,
+            xp.reshape(-1, block, x.shape[1]),
+        )
+        return out.reshape(-1)[:n]
+
+
+def falkon_fit(
+    kernel: Kernel,
+    x: Array,
+    y: Array,
+    centers: Array,
+    lam: float,
+    *,
+    a_diag: Array | None = None,
+    iters: int = 20,
+    knm_quadratic: Callable[[Array], Array] | None = None,
+    knm_t_y: Array | None = None,
+    callback: Callable[[int, FalkonModel], None] | None = None,
+) -> FalkonModel:
+    """Fit FALKON (uniform A=I) or FALKON-BLESS (A from Alg. 1/2).
+
+    ``knm_quadratic`` / ``knm_t_y`` let callers swap in the Pallas fused
+    operator or the shard_map distributed one; defaults stream locally.
+    """
+    n = x.shape[0]
+    m = centers.shape[0]
+    a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
+    prec = make_preconditioner(kernel, centers, a_diag, lam, n)
+    kmm = kernel.cross(centers, centers)
+    quad = knm_quadratic or local_knm_quadratic(kernel, x, centers)
+    kty = local_knm_t(kernel, x, centers, y) if knm_t_y is None else knm_t_y
+
+    def matvec(v: Array) -> Array:
+        u = prec.apply(v)
+        w = quad(u) + lam * n * (kmm @ u)
+        return prec.apply_t(w)
+
+    b = prec.apply_t(kty)
+    cb = None
+    if callback is not None:
+        def cb(i, beta):  # noqa: E731 — host-side metric hook
+            callback(i, FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel))
+    beta = cg(matvec, b, iters, callback=cb)
+    return FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel)
+
+
+def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: float,
+                     lam_falkon: float, *, iters: int = 20, q2: float = 3.0,
+                     m_cap: int | None = None, callback=None) -> FalkonModel:
+    """FALKON-BLESS end-to-end: BLESS centers/weights at lam_bless, CG at
+    lam_falkon (the paper's lam_bless >> lam_falkon trick, Sec. 4)."""
+    from .bless import bless
+
+    res = bless(key, x, kernel, lam_bless, q2=q2, m_cap=m_cap)
+    lvl = res.final
+    m = lvl.m_h
+    idx = lvl.centers.idx[:m]
+    a = lvl.centers.weight[:m]
+    return falkon_fit(kernel, x, y, x[idx], lam_falkon, a_diag=a, iters=iters,
+                      callback=callback)

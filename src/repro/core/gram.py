@@ -1,0 +1,98 @@
+"""Kernel (Gram) computations.
+
+The paper works with a bounded PSD kernel ``K(x, x') <= kappa^2`` (Eq. 17).
+``Kernel`` is a tiny pytree so jitted core functions retrace only when the
+kernel *family* changes, not when its bandwidth does.
+
+The blockwise entry points here are the pure-jnp reference path; on real TPU
+hardware the same contractions are served by the Pallas kernels in
+``repro.kernels.gram`` / ``repro.kernels.falkon_matvec`` (selected via
+``use_pallas`` flags higher up the stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """A bounded positive-definite kernel ``k(x, z)``.
+
+    Attributes:
+      name: kernel family ("gaussian" | "laplacian" | "linear").
+      sigma: bandwidth (ignored for "linear").
+      kappa_sq: uniform bound on ``k(x, x)`` (1.0 for the exponential families;
+        must be supplied for "linear" if inputs are not normalized).
+    """
+
+    name: str = "gaussian"
+    sigma: float = 1.0
+    kappa_sq: float = 1.0
+
+    # -- pytree plumbing (name/kappa_sq static, sigma traced) ---------------
+    def tree_flatten(self):
+        return (jnp.asarray(self.sigma),), (self.name, self.kappa_sq)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        name, kappa_sq = aux
+        return cls(name=name, sigma=children[0], kappa_sq=kappa_sq)
+
+    # -- API -----------------------------------------------------------------
+    def cross(self, x: jax.Array, z: jax.Array) -> jax.Array:
+        """Gram block ``k(x_i, z_j)`` of shape (n, m)."""
+        if self.name == "gaussian":
+            return jnp.exp(-sq_dists(x, z) / (2.0 * self.sigma**2))
+        if self.name == "laplacian":
+            d = jnp.sqrt(jnp.maximum(sq_dists(x, z), 1e-30))
+            return jnp.exp(-d / self.sigma)
+        if self.name == "linear":
+            return x @ z.T
+        raise ValueError(f"unknown kernel {self.name!r}")
+
+    def diag(self, x: jax.Array) -> jax.Array:
+        """``k(x_i, x_i)`` of shape (n,)."""
+        if self.name in ("gaussian", "laplacian"):
+            return jnp.ones((x.shape[0],), x.dtype)
+        return jnp.sum(x * x, axis=-1)
+
+    def gram(self, x: jax.Array) -> jax.Array:
+        return self.cross(x, x)
+
+
+def sq_dists(x: jax.Array, z: jax.Array) -> jax.Array:
+    """Pairwise squared Euclidean distances, MXU-friendly form.
+
+    ||x - z||^2 = ||x||^2 + ||z||^2 - 2 x.z  — one (n,d)x(d,m) matmul plus
+    rank-1 updates; clamped at 0 against fp cancellation.
+    """
+    xn = jnp.sum(x * x, axis=-1)[:, None]
+    zn = jnp.sum(z * z, axis=-1)[None, :]
+    d2 = xn + zn - 2.0 * (x @ z.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def make_kernel(name: str = "gaussian", sigma: float = 1.0, kappa_sq: float = 1.0) -> Kernel:
+    return Kernel(name=name, sigma=sigma, kappa_sq=kappa_sq)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def blocked_cross(kernel: Kernel, x: jax.Array, z: jax.Array, *, block: int = 4096) -> jax.Array:
+    """Gram ``k(X, Z)`` computed in row blocks of ``x`` to bound peak memory.
+
+    Used when (n, m) is too large for one materialized intermediate; the
+    distance matrix per block is (block, m).
+    """
+    n = x.shape[0]
+    if n <= block:
+        return kernel.cross(x, z)
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xb = xp.reshape(-1, block, x.shape[1])
+    out = jax.lax.map(lambda xi: kernel.cross(xi, z), xb)
+    return out.reshape(-1, z.shape[0])[:n]

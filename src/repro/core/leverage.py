@@ -1,0 +1,158 @@
+"""Ridge leverage scores: exact (Eq. 1) and Nystrom-approximate (Eq. 3).
+
+All approximate-score paths run on *padded* center buffers with validity
+masks so every ladder level of BLESS hits a bounded set of jit shapes
+(pow2 buckets), which is what makes the host-orchestrated ladder cheap.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .gram import Kernel
+
+_SCORE_FLOOR = 1e-12  # keep sampling probabilities strictly positive
+
+
+class CenterSet(NamedTuple):
+    """A weighted Nystrom center set (J, A) on a padded buffer.
+
+    idx:    (Mbuf,) int32 indices into [n]; arbitrary on invalid slots.
+    weight: (Mbuf,) float  diag(A) of the paper's weight matrix A; 1 on
+            invalid slots (keeps the padded K_JJ + lam*n*A well conditioned).
+    mask:   (Mbuf,) bool   validity.
+    count:  ()      int32  number of valid centers (|J|).
+    """
+
+    idx: jax.Array
+    weight: jax.Array
+    mask: jax.Array
+    count: jax.Array
+
+    @staticmethod
+    def empty(mbuf: int) -> "CenterSet":
+        return CenterSet(
+            idx=jnp.zeros((mbuf,), jnp.int32),
+            weight=jnp.ones((mbuf,), jnp.float32),
+            mask=jnp.zeros((mbuf,), bool),
+            count=jnp.asarray(0, jnp.int32),
+        )
+
+
+def exact_rls(kernel: Kernel, x: jax.Array, lam: float) -> jax.Array:
+    """Exact ridge leverage scores  l(i, lam) = [K (K + lam n I)^{-1}]_ii.
+
+    O(n^3) — the oracle everything else is measured against (Eq. 1).
+    Uses diag((K + lam n I)^{-1} K) = diag of the PSD solve, via Cholesky.
+    """
+    n = x.shape[0]
+    k = kernel.gram(x)
+    s = _psd_solve(k + lam * n * jnp.eye(n, dtype=k.dtype), k)
+    return jnp.clip(jnp.diagonal(s), _SCORE_FLOOR, 1.0)
+
+
+def effective_dim(kernel: Kernel, x: jax.Array, lam: float) -> jax.Array:
+    """d_eff(lam) = sum_i l(i, lam)."""
+    return jnp.sum(exact_rls(kernel, x, lam))
+
+
+@jax.jit
+def approx_rls(
+    kernel: Kernel,
+    x_cand: jax.Array,
+    cand_mask: jax.Array,
+    x_all: jax.Array,
+    centers: CenterSet,
+    lam: jax.Array,
+) -> jax.Array:
+    """Approximate leverage scores (Eq. 3) of candidates against (J, A).
+
+      l~_J(i, lam) = (lam n)^{-1} (K_ii - K_Ji^T (K_JJ + lam n A)^{-1} K_Ji)
+
+    n is the *full* dataset size (x_all.shape[0]); candidates/centers live on
+    padded buffers with masks. Invalid centers are neutralized by zeroing
+    their Gram rows/cols and pinning the regularized diagonal to 1.
+    Returns (Rbuf,) scores; entries at invalid candidates are _SCORE_FLOOR.
+    """
+    n = x_all.shape[0]
+    z = x_all[centers.idx]  # (Mbuf, d)
+    kdiag = kernel.diag(x_cand)
+
+    def no_centers(_):
+        return kdiag / (lam * n)
+
+    def with_centers(_):
+        m = centers.mask.astype(x_all.dtype)
+        kjj = kernel.cross(z, z) * (m[:, None] * m[None, :])
+        reg = jnp.where(centers.mask, lam * n * centers.weight, 1.0)
+        kjj = kjj + jnp.diag(reg)
+        g = kernel.cross(x_cand, z) * m[None, :]  # (Rbuf, Mbuf)
+        chol = _chol_with_jitter(kjj)
+        v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)  # (Mbuf, Rbuf)
+        quad = jnp.sum(v * v, axis=0)
+        return (kdiag - quad) / (lam * n)
+
+    scores = jax.lax.cond(centers.count > 0, with_centers, no_centers, None)
+    scores = jnp.clip(scores, _SCORE_FLOOR, 1.0)
+    return jnp.where(cand_mask, scores, _SCORE_FLOOR)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def approx_rls_all(
+    kernel: Kernel,
+    x_all: jax.Array,
+    centers: CenterSet,
+    lam: jax.Array,
+    *,
+    block: int = 4096,
+) -> jax.Array:
+    """Eq. 3 scores for every i in [n], blocked over rows (used by Fig. 1)."""
+    n = x_all.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x_all, ((0, pad), (0, 0)))
+    maskp = jnp.arange(n + pad) < n
+
+    def body(args):
+        xb, mb = args
+        return approx_rls(kernel, xb, mb, x_all, centers, lam)
+
+    out = jax.lax.map(body, (xp.reshape(-1, block, x_all.shape[1]), maskp.reshape(-1, block)))
+    return out.reshape(-1)[:n]
+
+
+def uniform_center_set(idx: jax.Array, n: int, mbuf: int) -> CenterSet:
+    """Uniformly sampled centers J with the A = (|J|/n) I convention.
+
+    With this weighting, Eq. 3 becomes the standard Nystrom RLS estimate
+    (K_JJ + lam |J| I)^{-1} — see DESIGN.md §2 / Prop. 1 of the paper.
+    """
+    m = idx.shape[0]
+    assert m <= mbuf
+    pad = mbuf - m
+    return CenterSet(
+        idx=jnp.pad(idx.astype(jnp.int32), (0, pad)),
+        weight=jnp.pad(jnp.full((m,), m / n, jnp.float32), (0, pad), constant_values=1.0),
+        mask=jnp.arange(mbuf) < m,
+        count=jnp.asarray(m, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def _chol_with_jitter(a: jax.Array) -> jax.Array:
+    """Cholesky with a trace-scaled jitter retry for fp32 robustness."""
+    eps = 1e-6 * jnp.mean(jnp.diagonal(a))
+    chol = jnp.linalg.cholesky(a + eps * jnp.eye(a.shape[0], dtype=a.dtype))
+    bad = jnp.any(jnp.isnan(chol))
+    chol2 = jnp.linalg.cholesky(a + (1e3 * eps) * jnp.eye(a.shape[0], dtype=a.dtype))
+    return jnp.where(bad, chol2, chol)
+
+
+def _psd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    chol = _chol_with_jitter(a)
+    y = jax.scipy.linalg.solve_triangular(chol, b, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)

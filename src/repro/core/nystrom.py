@@ -1,0 +1,35 @@
+"""Direct Nystrom-KRR solver (paper Def. 4) and exact KRR — test oracles.
+
+    alpha = (K_nM^T K_nM + lam n K_MM)^+ K_nM^T y        (Def. 4)
+    c     = (K + lam n I)^{-1} y                          (Eq. 12, exact KRR)
+
+Both are O(n M^2) / O(n^3) dense solves; FALKON's CG must converge to the
+Def. 4 solution, which is what tests/test_falkon.py asserts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .falkon import FalkonModel
+from .gram import Kernel
+from .leverage import _chol_with_jitter, _psd_solve
+
+Array = jax.Array
+
+
+def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float) -> FalkonModel:
+    n = x.shape[0]
+    knm = kernel.cross(x, centers)
+    kmm = kernel.cross(centers, centers)
+    h = knm.T @ knm + lam * n * kmm
+    alpha = _psd_solve(h, knm.T @ y)
+    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel)
+
+
+def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float) -> FalkonModel:
+    n = x.shape[0]
+    k = kernel.gram(x)
+    chol = _chol_with_jitter(k + lam * n * jnp.eye(n, dtype=k.dtype))
+    c = jax.scipy.linalg.cho_solve((chol, True), y)
+    return FalkonModel(centers=x, alpha=c, kernel=kernel)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, TokenPipeline
+
+__all__ = ["SyntheticLM", "TokenPipeline"]

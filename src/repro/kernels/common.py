@@ -1,0 +1,27 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (MXU-aligned tiles, VMEM BlockSpecs) and are
+*validated* on CPU with ``interpret=True`` (the container has no TPU).
+``default_interpret()`` picks the right mode automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad_dim(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

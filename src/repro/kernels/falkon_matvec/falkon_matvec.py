@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused FALKON CG matvec  r = K_nM^T (K_nM v).
+
+The O(n M d + n M) inner loop of every FALKON CG iteration. On GPU the
+reference FALKON implementation materializes K_nM block-by-block in HBM and
+runs two GEMVs per block (arithmetic intensity ~4 FLOP/B on the second
+pass). Here each (bn, d) tile of X is streamed HBM->VMEM exactly once; the
+Gram tile G = k(X_tile, Z), t = G v and r += G^T t all happen in VMEM, so
+HBM traffic is n*d reads + M writes total — the kernel is MXU-bound for
+M >= ~256 (DESIGN.md §2).
+
+Grid (n/bn,): Z (M, d) and v (M,) are VMEM-resident across the whole sweep
+(M*d <= ~4M floats for the paper's d_eff-sized center sets); the (M,) output
+block is revisited every step and accumulated.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
+                   bn: int, n_valid: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    z = z_ref[...].astype(jnp.float32)  # (M, d)
+    prod = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (bn, M)
+    if kind == "linear":
+        g = prod
+    else:
+        d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
+                         - 2.0 * prod, 0.0)
+        g = jnp.exp(-d2 * inv_scale) if kind == "gaussian" else jnp.exp(
+            -jnp.sqrt(d2 + 1e-30) * inv_scale)
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    g = jnp.where(rows < n_valid, g, 0.0)  # padded X rows contribute nothing
+    t = g @ v_ref[...].astype(jnp.float32)  # (bn,)
+    o_ref[...] += t @ g  # G^T t, still in VMEM
+
+
+@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret", "inv_scale"))
+def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float,
+                         *, kind: str = "gaussian", bn: int = 512, n_valid: int,
+                         interpret: bool = True) -> jax.Array:
+    """K_nM^T K_nM v for pre-padded x (n, d), z (M, d), v (M,)."""
+    n, d = x.shape
+    m = z.shape[0]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    return pl.pallas_call(
+        partial(_matvec_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
+                n_valid=n_valid),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(x, z, v)

@@ -1,0 +1,45 @@
+"""Public wrapper for the fused K_nM^T K_nM v operator.
+
+``make_knm_quadratic_op`` returns a closure with the ``knm_quadratic``
+signature expected by ``repro.core.falkon.falkon_fit`` — drop-in for the
+pure-jnp streamer on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, pad_dim, round_up
+from .falkon_matvec import falkon_matvec_pallas
+from .ref import falkon_matvec_ref
+
+
+def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,
+                  kind: str = "gaussian", bn: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    """K_nM^T (K_nM v) -> (M,) fp32. Arbitrary shapes, padded internally."""
+    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
+    n, d = x.shape
+    m = z.shape[0]
+    interpret = default_interpret() if interpret is None else interpret
+    dp = round_up(d, 128)
+    xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
+    zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
+    # padded Z rows are the all-zeros point; its kernel values are nonzero but
+    # v is zero-padded so they never enter t, and we slice r back to (m,).
+    vp = pad_dim(v, 0, round_up(m, 128))
+    out = falkon_matvec_pallas(xp, zp, vp, float(inv_scale), kind=kind, bn=bn,
+                               n_valid=n, interpret=interpret)
+    return out[:m]
+
+
+def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
+                          kind: str = "gaussian", bn: int = 512,
+                          interpret: bool | None = None):
+    def op(v: jax.Array) -> jax.Array:
+        return falkon_matvec(x, z, v, sigma, kind=kind, bn=bn, interpret=interpret)
+
+    return op
+
+
+falkon_matvec_reference = falkon_matvec_ref

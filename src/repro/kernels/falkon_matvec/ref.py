@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused FALKON matvec."""
+import jax
+import jax.numpy as jnp
+
+from ..gram.ref import gram_ref
+
+
+def falkon_matvec_ref(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float,
+                      *, kind: str = "gaussian") -> jax.Array:
+    g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
+    return g.T @ (g @ v.astype(jnp.float32))

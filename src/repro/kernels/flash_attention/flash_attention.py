@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+The LM stack's compute hot-spot at prefill (train_4k / prefill_32k shapes).
+Standard streaming-softmax tiling adapted to TPU: grid (batch, q_head,
+q_block, kv_block) with kv innermost; running (m, l, acc) state lives in
+VMEM scratch and survives the sequential kv sweep; the output block
+(indexed by b, h, i only) is written in the kv-epilogue. GQA is expressed
+purely in the K/V index_map (q head h reads kv head h // group) so no
+KV replication ever hits HBM.
+
+Causality prunes entire kv blocks (pl.when(j <= i_hi)) rather than only
+masking inside the tile — half the sweep is skipped at train shapes.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, bq: int, bk: int, nk: int, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = corr[:, None] * acc_ref[...] + p @ v_ref[0, 0].astype(jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(j * bk <= i * bq + bq - 1)(body)
+    else:
+        body()
+
+    @pl.when(j == nk - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "scale"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                           bq: int = 256, bk: int = 256, interpret: bool = True,
+                           scale: float | None = None) -> jax.Array:
+    """q (B, Hq, S, D), k/v (B, Hkv, S, D) pre-padded: S % bq == S % bk == 0,
+    D % 128 == 0, Hq % Hkv == 0. ``scale`` must reflect the *unpadded* head
+    dim. Returns (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert s % bq == 0 and s % bk == 0 and hq % hkv == 0
+    group = hq // hkv
+    nk = s // bk
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+    return pl.pallas_call(
+        partial(_flash_kernel, scale=scale, bq=bq, bk=bk, nk=nk, causal=causal),
+        grid=(b, hq, s // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

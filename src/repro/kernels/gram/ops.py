@@ -1,0 +1,33 @@
+"""Public jit'd wrapper: pads to tile boundaries, dispatches Pallas vs ref."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, pad_dim, round_up
+from .gram import gram_pallas
+from .ref import gram_ref
+
+
+def gram(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussian",
+         bn: int = 256, bm: int = 256, interpret: bool | None = None) -> jax.Array:
+    """k(X, Z) -> (n, m). Arbitrary shapes; pads internally to (bn, bm, 128)."""
+    if kind == "gaussian":
+        inv_scale = 1.0 / (2.0 * sigma**2)
+    elif kind == "laplacian":
+        inv_scale = 1.0 / sigma
+    else:
+        inv_scale = 1.0
+    n, d = x.shape
+    m = z.shape[0]
+    interpret = default_interpret() if interpret is None else interpret
+    xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, round_up(d, 128))
+    zp = pad_dim(pad_dim(z, 0, round_up(m, bm)), 1, round_up(d, 128))
+    out = gram_pallas(xp, zp, float(inv_scale), kind=kind, bn=bn, bm=bm,
+                      interpret=interpret)
+    return out[:n, :m]
+
+
+def gram_reference(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussian") -> jax.Array:
+    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
+    return gram_ref(x, z, inv_scale, kind=kind)

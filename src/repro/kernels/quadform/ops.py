@@ -1,0 +1,22 @@
+"""Public wrapper: pads (n, m) to tile boundaries; zero-padding is exact
+because padded G columns/rows contribute 0 to the bilinear form."""
+from __future__ import annotations
+
+import jax
+
+from ..common import default_interpret, pad_dim, round_up
+from .quadform import quadform_pallas
+from .ref import quadform_ref
+
+
+def quadform(g: jax.Array, w: jax.Array, *, bn: int = 256, bm: int = 256,
+             interpret: bool | None = None) -> jax.Array:
+    """s_i = g_i^T W g_i for each row of G. G (n, m), W (m, m) -> (n,) fp32."""
+    n, m = g.shape
+    interpret = default_interpret() if interpret is None else interpret
+    gp = pad_dim(pad_dim(g, 0, round_up(n, bn)), 1, round_up(m, bm))
+    wp = pad_dim(pad_dim(w, 0, round_up(m, bm)), 1, round_up(m, bm))
+    return quadform_pallas(gp, wp, bn=bn, bm=bm, interpret=interpret)[:n]
+
+
+quadform_reference = quadform_ref

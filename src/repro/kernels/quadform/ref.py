@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the quadform kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def quadform_ref(g: jax.Array, w: jax.Array) -> jax.Array:
+    g32 = g.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    return jnp.sum((g32 @ w32) * g32, axis=1)

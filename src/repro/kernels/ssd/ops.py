@@ -1,0 +1,29 @@
+"""Public wrapper: pads S to the chunk size; padded tail uses dt=0 (decay
+exp(0)=1, zero input) so y[:s] and the final state are exact."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, round_up
+from .ref import ssd_ref
+from .ssd import ssd_pallas
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+        *, chunk: int = 128, interpret: bool | None = None):
+    bsz, s, h, p = x.shape
+    interpret = default_interpret() if interpret is None else interpret
+    sp = round_up(s, chunk)
+    pad = sp - s
+    if pad:
+        zx = ((0, 0), (0, pad), (0, 0), (0, 0))
+        x = jnp.pad(x, zx)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_pallas(x, dt, a, b, c, chunk=chunk, interpret=interpret)
+    return y[:, :s], state
+
+
+ssd_reference = ssd_ref

@@ -1,0 +1,11 @@
+"""Oracle: the pure-jnp chunked SSD from the model stack (itself validated
+against the naive recurrence in tests/test_ssd.py)."""
+import jax
+
+from ...models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+            *, chunk: int = 128):
+    y, state = ssd_chunked(x, dt, a, b[:, :, None, :], c[:, :, None, :], chunk=chunk)
+    return y, state

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan (fused).
+
+One grid step processes one (batch, chunk) tile: the intra-chunk decay
+tensor L = exp(segsum(dt*A)), the CB^T "attention-like" term, the chunk
+state build and the inter-chunk output all stay in VMEM; the recurrent
+(H, P, N) state is carried across the sequential chunk dimension in VMEM
+scratch, so HBM sees only x/dt/B/C reads and y writes — the chunked-SSD
+algorithm's O(S*Q) intermediates never materialize in HBM.
+
+All four heavy contractions are head-batched dot_generals (MXU):
+  y_diag[h] = (CB ⊙ L[h]) @ (dt x)[h]         (Q,Q)@(Q,P)
+  state[h] += (dt x decay_end)[h]^T @ B        (P,Q)@(Q,N)
+  y_off[h]  = decay_in ⊙ (C @ state_in[h]^T)   (Q,N)@(N,P)
+
+Grid (B, S/Q), chunk dim innermost (sequential carry).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref,
+                *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q, H)
+    a = a_ref[...].astype(jnp.float32)  # (H,)
+    bmat = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    da = dt * a[None, :]  # (Q, H) log-decay increments
+    cum = jnp.cumsum(da, axis=0)  # (Q, H)
+    # L[h, q, k] = exp(cum[q,h] - cum[k,h]) for k <= q
+    diff = cum.T[:, :, None] - cum.T[:, None, :]  # (H, Q, Q)
+    q = x.shape[0]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_dec = jnp.where(mask[None], jnp.exp(diff), 0.0)  # (H, Q, Q)
+
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    dtx = (dt[:, :, None] * x).transpose(1, 0, 2)  # (H, Q, P)
+    m = cb[None] * l_dec  # (H, Q, Q)
+    y_diag = jax.lax.dot_general(m, dtx, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)  # (H, Q, P)
+
+    st_in = state_ref[...]  # (H, P, N)
+    dec_in = jnp.exp(cum).T  # (H, Q) decay from chunk start to q (inclusive)
+    cs = jax.lax.dot_general(
+        jnp.broadcast_to(cmat[None], (st_in.shape[0],) + cmat.shape), st_in,
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)  # (H, Q, P)
+    y_off = dec_in[:, :, None] * cs
+
+    y_ref[0] = (y_diag + y_off).transpose(1, 0, 2).astype(y_ref.dtype)  # (Q, H, P)
+
+    # state update: decay-to-end-weighted inputs + decayed carry
+    total = cum[-1]  # (H,)
+    dec_end = jnp.exp(total[None, :] - cum)  # (Q, H)
+    w = (dtx.transpose(0, 2, 1) * dec_end.T[:, None, :])  # (H, P, Q)
+    st_new = jax.lax.dot_general(
+        w, jnp.broadcast_to(bmat[None], (w.shape[0],) + bmat.shape),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)  # (H, P, N)
+    state_ref[...] = jnp.exp(total)[:, None, None] * st_in + st_new
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        state_out_ref[0] = state_ref[...]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+               *, chunk: int = 128, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) [negative],
+    b/c (B,S,N); S % chunk == 0. Returns (y (B,S,H,P), state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    return pl.pallas_call(
+        partial(_ssd_kernel, nc=nc),
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((h,), lambda bi, ci: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,168 @@
+# Multi-pod dry-run: these two lines MUST run before any other import —
+# jax locks the device count on first init (see assignment §MULTI-POD).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch import cost_model, hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.sharding.rules import MeshCtx, set_mesh_ctx  # noqa: E402
+
+"""For every (arch x input-shape x mesh) cell: lower + compile the step
+function on placeholder devices, print memory_analysis / cost_analysis, and
+derive the roofline terms (hlo_analysis). Results are cached as JSON under
+exp/dryrun/ for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all            # every supported cell
+"""
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    info = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        return 6.0 * n_active * tokens
+    if info["kind"] == "prefill":
+        return 2.0 * n_active * info["batch"] * info["seq"]
+    return 2.0 * n_active * info["batch"]  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             attention_impl: str | None = None,
+             moe_sharding: str | None = None,
+             hlo_path: str | None = None,
+             kv_len: int | None = None,
+             microbatches: int = 1,
+             zero: int = 3) -> dict:
+    cfg = get_config(arch)
+    if attention_impl:
+        cfg = dataclasses.replace(cfg, attention_impl=attention_impl)
+    if moe_sharding:
+        cfg = dataclasses.replace(cfg, moe_sharding=moe_sharding)
+    ok, why = cell_supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = MeshCtx(mesh=mesh)
+    set_mesh_ctx(ctx)
+    try:
+        fn, args, donate = input_specs(cfg, shape_name, ctx, kv_len=kv_len,
+                                       microbatches=microbatches, zero=zero)
+        t0 = time.time()
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis: "
+              f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temps={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB")
+        cost = compiled.cost_analysis()
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e} "
+              "(loop bodies counted once by XLA - see cost_model)")
+        info = SHAPES[shape_name]
+        chips = mesh.devices.size
+        s_kv = (kv_len or info["seq"]) if info["kind"] == "decode" else None
+        ana = cost_model.step_costs(
+            cfg, info["kind"], info["batch"], 1 if info["kind"] == "decode" else info["seq"],
+            chips, s_kv=s_kv)
+        hlo_text = compiled.as_text()
+        if hlo_path:
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo_text)
+        coll = hlo_analysis.collective_bytes(hlo_text)
+        roof = hlo_analysis.Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            flops_per_device=ana["flops_per_device"],
+            bytes_per_device=ana["hbm_bytes_per_device"],
+            coll_bytes_per_device=float(sum(coll.values())),
+            coll_breakdown=coll,
+            peak_memory_per_device=float(mem.argument_size_in_bytes
+                                         + mem.temp_size_in_bytes),
+            model_flops=model_flops(cfg, shape_name))
+        row = roof.row()
+        row.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1),
+                   attention_impl=cfg.attention_impl,
+                   xla_flops_flat=cost.get("flops", 0),
+                   mem_args_gb=round(mem.argument_size_in_bytes / 2**30, 3),
+                   mem_temps_gb=round(mem.temp_size_in_bytes / 2**30, 3),
+                   flops_breakdown={k: v for k, v in ana["flops_breakdown"].items() if v})
+        return row
+    except Exception as e:  # noqa: BLE001 — report failures as data
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "failed", "error": f"{type(e).__name__}: {e}"}
+    finally:
+        set_mesh_ctx(None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--attention-impl", choices=["full", "bless_nystrom"])
+    ap.add_argument("--moe-sharding", choices=["auto", "ep", "tp", "replicate"])
+    ap.add_argument("--kv-cache-len", type=int, default=None,
+                    help="decode-cache override: BLESS-compressed KV serving")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--zero", type=int, choices=[1, 3], default=3)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="exp/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.attention_impl:
+                tag += f"__{args.attention_impl}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"cached: {tag}")
+                continue
+            row = run_cell(arch, shape, mp, attention_impl=args.attention_impl,
+                           moe_sharding=args.moe_sharding,
+                           hlo_path=path.replace(".json", ".hlo.gz"),
+                           kv_len=args.kv_cache_len,
+                           microbatches=args.microbatches, zero=args.zero)
+            with open(path, "w") as f:
+                json.dump(row, f, indent=1)
+            print(f"{tag}: {row['status']} "
+                  + (f"bottleneck={row.get('bottleneck')} "
+                     f"roofline={row.get('roofline_fraction', 0):.3f}"
+                     if row["status"] == "ok" else row.get("reason", row.get("error", ""))))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape_name, ctx)`` returns (fn, args) where fn is the
+step to lower and args are ShapeDtypeStructs carrying NamedShardings — no
+device allocation ever happens for full-size configs.
+
+Shape set (assigned):
+  train_4k     seq 4096,  global_batch 256  -> train_step
+  prefill_32k  seq 32768, global_batch 32   -> prefill_logits (serve)
+  decode_32k   seq 32768 KV, batch 128      -> decode_step    (serve)
+  long_500k    seq 524288 KV, batch 1       -> decode_step    (serve, SP)
+
+Skips (documented in DESIGN.md §6): long_500k for pure full-attention
+archs; decode shapes for encoder-only archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import (cache_specs, decode_step, init_cache, init_params,
+                      padded_vocab, param_specs)
+from ..models.config import ArchConfig
+from ..optim import OptConfig, adamw_init, opt_state_specs
+from ..serving.engine import prefill_logits
+from ..sharding.rules import MeshCtx, logical_to_spec
+from ..training import TrainState, make_train_step
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm")  # no sub-quadratic path
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    info = SHAPES[shape_name]
+    if info["kind"] == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch: no decode step"
+    if shape_name == "long_500k" and cfg.family in FULL_ATTENTION_FAMILIES \
+            and cfg.attention_impl != "bless_nystrom":
+        return False, "full-attention arch: 500k KV needs sub-quadratic attention"
+    if info["kind"] == "train" and shape_name == "train_4k" and not cfg.causal:
+        pass  # encoder training is fine
+    return True, ""
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _ns(ctx: MeshCtx, *logical):
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(ctx.mesh, logical_to_spec(*logical, ctx=ctx))
+
+
+def _with_sharding(tree_shapes: Any, tree_specs: Any, mesh) -> Any:
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, NamedSharding(mesh, p)),
+        tree_shapes, tree_specs)
+
+
+def batch_specs(cfg: ArchConfig, b: int, s: int, ctx: MeshCtx) -> dict:
+    """Input batch ShapeDtypeStructs for a full forward/train step."""
+    bat: dict[str, Any] = {}
+    tok_sh = _ns(ctx, "batch", None)
+    if cfg.embed_inputs:
+        bat["tokens"] = _sds((b, s), jnp.int32, tok_sh)
+    else:
+        bat["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16, _ns(ctx, "batch", None, None))
+    bat["labels"] = _sds((b, s), jnp.int32, tok_sh)
+    if cfg.pos == "mrope":
+        bat["mrope_positions"] = _sds((b, 3, s), jnp.int32, _ns(ctx, "batch", None, None))
+    if cfg.extra_image_tokens:
+        bat["pixel_embeds"] = _sds((b, cfg.extra_image_tokens, cfg.d_model), jnp.bfloat16,
+                                   _ns(ctx, "batch", None, None))
+    return bat
+
+
+def params_sds(cfg: ArchConfig, ctx: MeshCtx) -> Any:
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return _with_sharding(shapes, param_specs(cfg, ctx), ctx.mesh)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, ctx: MeshCtx,
+                opt_cfg: Optional[OptConfig] = None,
+                loss_chunks: int = 32,
+                kv_len: Optional[int] = None,
+                microbatches: int = 1,
+                zero: int = 3) -> tuple[Callable, tuple, tuple[int, ...]]:
+    """(step_fn, arg ShapeDtypeStructs, donate_argnums) for one cell.
+
+    Donation: the train state and the decode cache are consumed in place —
+    on real hardware this is what keeps optimizer+cache memory flat.
+    kv_len: decode-cache length override — the BLESS leverage-score KV
+    compression serving mode (models.attention.bless_compress_cache keeps
+    the top-M RLS keys; the decode step then runs against an M-entry cache).
+    """
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if kv_len is not None and info["kind"] == "decode":
+        s = kv_len
+    kind = info["kind"]
+    if kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        # ZeRO-3 (default): params fsdp+tp sharded, re-gathered every
+        # microbatch. ZeRO-1: params tp-only (replicated over data; no
+        # per-microbatch gathers), optimizer state fsdp+tp sharded — the
+        # right trade once grad accumulation is on (EXPERIMENTS.md §Perf).
+        p_ctx = dataclasses.replace(ctx, fsdp=False) if zero == 1 else ctx
+        pspecs = param_specs(cfg, p_ctx)
+        shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        p_sds = _with_sharding(shapes, pspecs, p_ctx.mesh)
+        opt_shapes = jax.eval_shape(adamw_init, shapes)
+        o_sds = _with_sharding(opt_shapes, opt_state_specs(param_specs(cfg, ctx)),
+                               ctx.mesh)
+        state = TrainState(params=p_sds, opt=o_sds)
+        bat = batch_specs(cfg, b, s, ctx)
+        from jax.sharding import NamedSharding
+
+        gshard = jax.tree.map(lambda p: NamedSharding(ctx.mesh, p),
+                              param_specs(cfg, ctx)) if microbatches > 1 else None
+        fn = make_train_step(cfg, opt_cfg, loss_chunks=loss_chunks,
+                             microbatches=microbatches, grad_shardings=gshard)
+        return fn, (state, bat), (0,)
+
+    serve_ctx = dataclasses.replace(ctx, fsdp=False)
+    p_sds = params_sds(cfg, serve_ctx)
+    if kind == "prefill":
+        bat = batch_specs(cfg, b, s, serve_ctx)
+        bat.pop("labels")
+        return (lambda params, batch: prefill_logits(params, cfg, batch)), (p_sds, bat), ()
+
+    # decode: batch over (pod,data); KV seq over model (decode_32k) or over
+    # data+model (long_500k, batch=1 — SP across every chip)
+    seq_logical = "seq_shard_wide" if b == 1 else "seq_model"
+    rules = dict(serve_ctx.rules)
+    rules["seq_model"] = ("model",)
+    if b == 1:
+        rules["batch"] = ()  # batch=1: nothing to shard
+    dctx = dataclasses.replace(serve_ctx, rules=rules)
+    p_sds = params_sds(cfg, dctx)
+    cshapes = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    c_sds = _with_sharding(cshapes, cache_specs(cfg, dctx, seq_logical=seq_logical), dctx.mesh)
+    tok = _sds((b,), jnp.int32, _ns(dctx, "batch"))
+    pos = _sds((), jnp.int32, _ns(dctx))
+    if cfg.pos == "mrope":
+        mp = _sds((b, 3, 1), jnp.int32, _ns(dctx, "batch", None, None))
+
+        def fn(params, cache, token, pos, mrope_pos):
+            return decode_step(params, cfg, cache, token, pos, mrope_pos=mrope_pos)
+
+        return fn, (p_sds, c_sds, tok, pos, mp), (1,)
+
+    def fn(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos)
+
+    return fn, (p_sds, c_sds, tok, pos), (1,)

@@ -1,0 +1,6 @@
+from .config import ArchConfig
+from .model import (cache_specs, decode_step, forward, init_cache, init_params,
+                    loss_fn, logits_fn, padded_vocab, param_specs)
+
+__all__ = ["ArchConfig", "cache_specs", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "logits_fn", "padded_vocab", "param_specs"]

@@ -1,0 +1,199 @@
+"""Attention variants: chunked-full (train/prefill), decode w/ KV cache,
+and BLESS-Nystrom sub-quadratic attention (the paper's technique in the LM).
+
+All paths are pure jnp + lax so they lower for any mesh; the Pallas flash
+kernel (repro.kernels.flash_attention) is the TPU drop-in for the chunked
+path (use_pallas flag in model.py).
+
+BLESS-Nystrom (DESIGN.md §3): softmax attention against M landmark keys
+selected by *ridge leverage scores* of the key Gram matrix (Gaussian kernel
+at bandwidth sqrt(head_dim), one rung of the BLESS ladder evaluated
+in-graph with a uniform pilot set — top-M by score replaces multinomial
+sampling to keep shapes static). Used for (a) sub-quadratic encoder/prefill
+attention and (b) leverage-score KV-cache compression at decode, which is
+what makes long_500k lowerable for a *dense* arch.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_NEG = -1e30
+
+
+def _repeat_kv(x: Array, group: int) -> Array:
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by group replication."""
+    if group == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, group, d)).reshape(b, s, h * group, d)
+
+
+def _merge_chunks(out: Array, b: int, hq: int, nc: int, chunk: int, d: int, s: int) -> Array:
+    """(nc, B, Hq, c, D) -> (B, S, Hq, D)."""
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, hq, d)[:, :s]
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool, chunk: int = 512,
+              softcap: float = 0.0) -> Array:
+    """Public exact attention: chunked when S > chunk, single-shot otherwise.
+
+    q heads ride the model axis (GQA kv stays replicated and is broadcast
+    locally — each chip's q-head slice reads its own kv group)."""
+    from ..sharding.rules import shard
+
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    q = shard(q, "batch", None, "model", None)
+    kf = _repeat_kv(k, hq // hkv).transpose(0, 2, 1, 3)
+    vf = _repeat_kv(v, hq // hkv).transpose(0, 2, 1, 3)
+    kf = shard(kf, "batch", "model", None, None)
+    vf = shard(vf, "batch", "model", None, None)
+    kpos = jnp.arange(s)
+
+    def run_chunk(qi: Array, q0: Array) -> Array:
+        # qi (B, Hq, c, D); q0 scalar chunk start
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                            kf.astype(jnp.float32)) * scale
+        if softcap > 0.0:
+            scores = softcap * jnp.tanh(scores / softcap)
+        if causal:
+            qpos = q0 + jnp.arange(qi.shape[2])
+            scores = jnp.where(qpos[:, None] >= kpos[None, :], scores, _NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, Hq, S, D)
+    if s <= chunk:
+        return run_chunk(qt, jnp.asarray(0)).transpose(0, 2, 1, 3)
+    pad = (-s) % chunk
+    qp = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = qp.shape[2] // chunk
+    qc = qp.reshape(b, hq, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    out = jax.lax.map(lambda args: run_chunk(args[1], args[0] * chunk),
+                      (jnp.arange(nc), qc))  # (nc, B, Hq, c, D)
+    return _merge_chunks(out, b, hq, nc, chunk, d, s)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
+                     softcap: float = 0.0, length: Array | None = None) -> Array:
+    """Single-token decode. q (B, 1, Hq, D); caches (B, S, Hkv, D).
+
+    The cache S dim may be sharded (SP decode): softmax max/sum reductions
+    over S are inserted as cross-shard collectives by the SPMD partitioner.
+    """
+    b, s, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q[:, 0].reshape(b, hkv, group, d)  # (B, Hkv, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if length is not None:  # scalar or per-slot (B,) lengths
+        lens = jnp.asarray(length).reshape(-1, 1, 1, 1)
+        scores = jnp.where(jnp.arange(s)[None, None, None, :] < lens, scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# BLESS-Nystrom: leverage-score landmarks (the paper's technique, in-graph)
+# ---------------------------------------------------------------------------
+
+
+def rls_scores_one_rung(keys: Array, m_pilot: int, lam: float) -> Array:
+    """One BLESS rung: Eq. 3 scores of every key against a uniform pilot set.
+
+    keys (S, D). Gaussian kernel at bandwidth^2 = sqrt(D) (softmax-kernel
+    proxy, see module docstring). Pilot = strided subset (deterministic —
+    the in-graph analogue of the uniform U_h; DESIGN.md §3).
+    """
+    s, d = keys.shape
+    kf = keys.astype(jnp.float32)
+    inv = 1.0 / (2.0 * math.sqrt(d))
+    stride = max(1, s // m_pilot)
+    pilot = kf[::stride][:m_pilot]
+    mp = pilot.shape[0]
+
+    def gram(a, b):
+        d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :] - 2 * a @ b.T)
+        return jnp.exp(-jnp.maximum(d2, 0.0) * inv)
+
+    kjj = gram(pilot, pilot) + (lam * s * (mp / s) + 1e-5) * jnp.eye(mp)
+    g = gram(kf, pilot)  # (S, mp)
+    chol = jnp.linalg.cholesky(kjj)
+    vsol = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
+    quad = jnp.sum(vsol * vsol, axis=0)
+    return jnp.clip((1.0 - quad) / (lam * s), 1e-12, 1.0)  # K_ii = 1 (gaussian)
+
+
+def bless_topm_landmarks(keys: Array, m: int, *, m_pilot: int = 128,
+                         lam: float = 1e-3) -> Array:
+    """Indices (m,) of the top-m leverage-score keys. keys (S, D)."""
+    scores = rls_scores_one_rung(keys, m_pilot, lam)
+    return jax.lax.top_k(scores, m)[1]
+
+
+def nystrom_attention(q: Array, k: Array, v: Array, *, landmarks: int,
+                      lam: float = 1e-3) -> Array:
+    """Sub-quadratic bidirectional attention via RLS landmarks.
+
+    q (B, S, Hq, D), k/v (B, S, Hkv, D); cost O(S * M) with M = landmarks.
+      out = softmax(Q K_L^T) @ pinv(softmax(Q_L K_L^T)) @ softmax(Q_L K^T) V
+    Landmarks are per (batch, kv-head) leverage-score top-M keys.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    m = min(landmarks, s)
+
+    def per_bh(qh, kh, vh):
+        # qh (group, S, D) for this kv head; kh/vh (S, D)
+        idx = bless_topm_landmarks(kh, m, lam=lam)
+        kl, ql = kh[idx], qh[:, idx]  # (m, D), (group, m, D)
+        f1 = jax.nn.softmax(jnp.einsum("gsd,md->gsm", qh, kl) * scale, axis=-1)
+        a = jax.nn.softmax(jnp.einsum("gmd,nd->gmn", ql, kl) * scale, axis=-1)
+        f2 = jax.nn.softmax(jnp.einsum("gmd,sd->gms", ql, kh) * scale, axis=-1)
+        a_pinv = _iterative_pinv(a)
+        return jnp.einsum("gsm,gmn->gsn", f1, a_pinv) @ (f2 @ vh.astype(jnp.float32))
+
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, group, d).transpose(0, 2, 3, 1, 4)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B, Hkv, S, D)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    out = jax.vmap(jax.vmap(per_bh))(qf, kf, vf)  # (B, Hkv, group, S, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def _iterative_pinv(a: Array, iters: int = 6) -> Array:
+    """Newton-Schulz pseudo-inverse (Nystromformer Eq. 16) — jit-friendly."""
+    eye = jnp.eye(a.shape[-1], dtype=a.dtype)
+    z = a.swapaxes(-1, -2) / (jnp.max(jnp.sum(jnp.abs(a), -1), -1, keepdims=True)[..., None]
+                              * jnp.max(jnp.sum(jnp.abs(a), -2), -1, keepdims=True)[..., None])
+    for _ in range(iters):
+        az = a @ z
+        z = 0.25 * z @ (13.0 * eye - az @ (15.0 * eye - az @ (7.0 * eye - az)))
+    return z
+
+
+def bless_compress_cache(k_cache: Array, v_cache: Array, m: int, *,
+                         m_pilot: int = 256, lam: float = 1e-4) -> tuple[Array, Array]:
+    """Leverage-score KV-cache compression: keep the top-m RLS keys per
+    (batch, kv head). caches (B, S, Hkv, D) -> (B, m, Hkv, D)."""
+
+    def per_bh(kh, vh):
+        idx = bless_topm_landmarks(kh, m, m_pilot=m_pilot, lam=lam)
+        return kh[idx], vh[idx]
+
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    kc, vc = jax.vmap(jax.vmap(per_bh))(kt, vt)
+    return kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3)

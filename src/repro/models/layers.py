@@ -1,0 +1,174 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, initializers.
+
+Pure-jnp, pjit-shardable (sharding enters only via repro.sharding.shard
+annotations in model.py). Parameters are plain nested dicts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --- init ------------------------------------------------------------------
+
+
+def ninit(key: Array, shape, scale: float | None = None, dtype=jnp.bfloat16) -> Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = (1.0 / math.sqrt(fan_in)) if scale is None else scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm with an explicit low-precision *gradient boundary*.
+
+    Internals run in f32, but dx is cast back to x.dtype before leaving the
+    op. Without this, XLA hoists the f32 upcast across the TP all-reduces
+    that sit just upstream (the row-parallel matmul psums), doubling every
+    per-layer collective on the backward pass — measured at ~2x the total
+    train collective volume (EXPERIMENTS.md §Perf iteration 4).
+    """
+    return _rms_fwd(x, gamma, eps)[0]
+
+
+def _rms_fwd(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (xf * inv) * (1.0 + gamma.astype(jnp.float32))
+    return y.astype(x.dtype), (x, gamma, inv)
+
+
+def _rms_bwd(eps, res, dy):
+    x, gamma, inv = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    g1 = 1.0 + gamma.astype(jnp.float32)
+    xhat = xf * inv
+    dxhat = dyf * g1
+    # d/dx of x * rsqrt(mean(x^2)+eps)
+    dx = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    dgamma = jnp.sum(dyf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+@jax.custom_vjp
+def lowp(x: Array) -> Array:
+    """Identity with a low-precision *gradient* boundary.
+
+    Placed on TP-matmul outputs (q/k/v projections): upstream attention math
+    runs in f32 (softmax, rope), so without this the cotangent arriving at
+    the transposed projection matmul — and therefore the per-layer TP
+    all-reduce of dx — is f32. The boundary casts it back to the forward
+    dtype, halving backward collective bytes (EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _lowp_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _lowp_bwd(res, dy):
+    return (dy.astype(res.dtype),)
+
+
+lowp.defvjp(_lowp_fwd, _lowp_bwd)
+
+
+# --- rotary ----------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, D), positions (..., S) -> rotated x (half-split layout)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_3d: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE. positions_3d (B, 3, S); the D/2 frequency
+    slots are partitioned into (t, h, w) sections, each rotated by its own
+    position stream. Equal streams reduce exactly to standard RoPE."""
+    d = x.shape[-1]
+    half = d // 2
+    tot = sum(sections)
+    sec = [s * half // tot for s in sections]  # static rescale to head_dim/2
+    sec[-1] += half - sum(sec)
+    bounds = jnp.asarray([sec[0], sec[0] + sec[1], half])
+    slot = jnp.arange(half)
+    which = (slot[None, :] >= bounds[:, None]).sum(0)  # (half,) in {0,1,2}
+    freqs = rope_freqs(d, theta)  # (half,)
+    # pos per slot: (B, S, half)
+    pos = jnp.take_along_axis(
+        positions_3d.transpose(0, 2, 1).astype(jnp.float32),  # (B, S, 3)
+        jnp.broadcast_to(which, positions_3d.shape[0:1] + (positions_3d.shape[2], half)),
+        axis=-1,
+    )
+    ang = pos * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d_model: int, dtype=jnp.bfloat16) -> Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --- mlp -------------------------------------------------------------------
+
+
+def act_fn(name: str, x: Array) -> Array:
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_apply(p: dict, x: Array, act: str) -> Array:
+    """Gated (SwiGLU/GeGLU) or plain (GELU) MLP. x (..., d); the hidden ff
+    dim rides the model axis (Megatron column->row pair)."""
+    from ..sharding.rules import shard
+
+    if "w_gate" in p:
+        h = act_fn(act, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act_fn(act, x @ p["w_up"])
+    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("model",)))
+    return h @ p["w_down"]
+
+
+def mlp_init(key: Array, d: int, ff: int, act: str, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": ninit(ks[0], (d, ff), dtype=dtype),
+         "w_down": ninit(ks[1], (ff, d), dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = ninit(ks[2], (d, ff), dtype=dtype)
+    return p

@@ -1,0 +1,164 @@
+"""Mamba-2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation (DESIGN.md §2): the chunked SSD algorithm is expressed as
+four einsums per chunk (intra-chunk "attention-like" term, chunk-state
+build, inter-chunk state scan, state-to-output) so all heavy work lands on
+the MXU; the only sequential op is the O(S/Q) inter-chunk scan. This is the
+matmul-form of SSD rather than a port of the CUDA selective-scan.
+
+Shapes follow the paper: x (B, S, H, P), dt (B, S, H), A (H,) negative,
+B/C (B, S, G, N) with G groups (G=1 here), state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ninit, rms_norm
+
+Array = jax.Array
+
+
+def _segsum(x: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (j < i)."""
+    t = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b: Array, c: Array, *, chunk: int = 256,
+                init_state: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a.astype(jnp.float32)  # (B, S, H) log-decay increments (<0)
+
+    xc = xf.reshape(bsz, nc, q, h, p)
+    dac = da.reshape(bsz, nc, q, h)
+    dtc = dtf.reshape(bsz, nc, q, h)
+    bc = b.astype(jnp.float32).reshape(bsz, nc, q, 1, n)  # G=1 broadcast over H
+    cc = c.astype(jnp.float32).reshape(bsz, nc, q, 1, n)
+
+    # 1) intra-chunk (diagonal blocks): y_diag = (C B^T  *  decay) (dt x)
+    l = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B, nc, H, Q, Q)
+    cb = jnp.einsum("bzqgn,bzkgn->bzqk", cc, bc)  # (B, nc, Q, Q)
+    y_diag = jnp.einsum("bzqk,bzhqk,bzkh,bzkhp->bzqhp", cb, l, dtc, xc)
+
+    # 2) per-chunk end-state: decay-to-end weighted sum of B (dt x)
+    dec_end = jnp.exp(jnp.cumsum(dac, axis=2)[:, :, -1:, :] - jnp.cumsum(dac, axis=2))
+    states = jnp.einsum("bzkgn,bzkh,bzkh,bzkhp->bzhpn", bc, dec_end, dtc, xc)
+
+    # 3) inter-chunk recurrence over nc chunk states
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))  # (B, nc, H)
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = st + dec[..., None, None] * carry
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # 4) inter-chunk output: C_t  decay-from-start  state_in
+    dec_in = jnp.exp(jnp.cumsum(dac, axis=2))  # (B, nc, Q, H)
+    y_off = jnp.einsum("bzqgn,bzqh,bzhpn->bzqhp", cc, dec_in, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: Array, x_t: Array, dt_t: Array, a: Array, b_t: Array,
+                    c_t: Array) -> tuple[Array, Array]:
+    """One recurrent step. state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    b_t/c_t (B,N). Returns (y_t (B,H,P), new_state)."""
+    sf = state.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32))  # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtf, x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+    new = decay[..., None, None] * sf + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# full block: in_proj -> conv -> SSD -> gated norm -> out_proj
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key: Array, cfg, dtype=jnp.bfloat16) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ns
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": ninit(ks[0], (d, 2 * di + 2 * ns + nh), dtype=dtype),
+        "conv_w": ninit(ks[1], (cfg.ssm_conv, conv_dim), scale=0.5, dtype=dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype=dtype),
+        "out_proj": ninit(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt: Array):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+    return z, xbc, dt  # xbc = [x (di), B (ns), C (ns)], dt (nh)
+
+
+def mamba_block(p: dict, cfg, u: Array, *, chunk: int = 256) -> Array:
+    """Full-sequence SSD mixer. u (B, S, d_model) -> (B, S, d_model)."""
+    from ..sharding.rules import shard
+
+    bsz, s, _ = u.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_proj(cfg, u @ p["in_proj"])
+    # causal depthwise conv over (x, B, C)
+    k = cfg.ssm_conv
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i: i + s] * p["conv_w"][i][None, None, :] for i in range(k))
+    conv = jax.nn.silu(conv)
+    x, b, c = jnp.split(conv, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    a = -jnp.exp(p["a_log"])  # (nh,)
+    # SSD heads ride the model axis: every per-head intermediate inside the
+    # chunk scan (the (B,nc,H,Q,Q) decay tensor above all) is TP-sharded.
+    x = shard(x.reshape(bsz, s, nh, hp), "batch", None, "model", None)
+    dt = shard(dt, "batch", None, "model")
+    y, _ = ssd_chunked(x, dt, a, b[:, :, None, :].reshape(bsz, s, 1, ns),
+                       c[:, :, None, :].reshape(bsz, s, 1, ns), chunk=min(chunk, s))
+    y = y + x * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = shard(y, "batch", None, "model", None).reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p: dict, cfg, u_t: Array, cache: dict) -> tuple[Array, dict]:
+    """One-token step. u_t (B, 1, d); cache = {conv (B, k-1, conv_dim),
+    state (B, H, P, N)}."""
+    bsz = u_t.shape[0]
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_proj(cfg, u_t[:, 0] @ p["in_proj"])  # (B, *)
+    k = cfg.ssm_conv
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, k, conv)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)).astype(u_t.dtype)
+    conv = jax.nn.silu(conv)
+    x, b, c = jnp.split(conv, [di, di + ns], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    a = -jnp.exp(p["a_log"])
+    y, new_state = ssd_decode_step(cache["state"], x.reshape(bsz, nh, hp), dtv, a, b, c)
+    y = y + x.reshape(bsz, nh, hp) * p["d_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": window[:, 1:], "state": new_state.astype(cache["state"].dtype)}

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts with group-local sort-based dispatch.
+
+Tokens are processed in *groups* (one group per sequence), so routing —
+softmax, top-k, argsort, rank-within-expert, capacity drop — is entirely
+local to the batch-sharded axis; the only cross-device movement is the
+all-to-all the SPMD partitioner inserts around the expert einsum when
+experts are sharded over the model axis (EP).
+
+Dispatch is sort-based (MegaBlocks-style) rather than GShard one-hot
+einsums: the (S*k, E) one-hot only feeds a cumsum for intra-expert ranks,
+never a (T, E, C) dispatch tensor, so memory is O(S*k*E) ints per group
+instead of O(T*E*C) floats globally.
+
+Expert sharding (DESIGN.md §5): experts->model when E % 16 == 0 (llama4 16e,
+jamba 16e: one expert per chip), else per-expert ff->model (granite 40e,
+d_ff 512 -> 32 cols/chip). Chosen per-config via ``moe_sharding``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, ninit
+
+Array = jax.Array
+
+
+def moe_init(key: Array, d: int, ff: int, n_experts: int, act: str,
+             shared_ff: int = 0, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": ninit(ks[0], (d, n_experts), dtype=jnp.float32),
+        "w_up": ninit(ks[1], (n_experts, d, ff), dtype=dtype),
+        "w_down": ninit(ks[2], (n_experts, ff, d), dtype=dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = ninit(ks[3], (n_experts, d, ff), dtype=dtype)
+    if shared_ff:
+        from .layers import mlp_init
+
+        p["shared"] = mlp_init(ks[4], d, shared_ff, act, dtype)
+    return p
+
+
+def _route_group(x: Array, router: Array, top_k: int, capacity: int, n_experts: int):
+    """Per-group routing. x (S, d) -> dispatch metadata.
+
+    Returns (slot, gate, keep):
+      slot (S*k,) int32 in [0, E*C]  — flat expert-buffer slot (E*C = dropped)
+      gate (S*k,) f32               — renormalized top-k router prob
+      src  (S*k,) int32             — source token index
+    """
+    s = x.shape[0]
+    logits = (x.astype(jnp.float32) @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (S, E)
+    top_p, top_e = jax.lax.top_k(probs, top_k)  # (S, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(-1)  # (S*k,)
+    flat_p = top_p.reshape(-1)
+    src = jnp.repeat(jnp.arange(s, dtype=jnp.int32), top_k)
+    # stable sort by expert => rank within expert via cumsum of one-hot
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    onehot = jax.nn.one_hot(e_sorted, n_experts, dtype=jnp.int32)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, e_sorted[:, None], axis=1)[:, 0]
+    keep = rank < capacity
+    slot_sorted = jnp.where(keep, e_sorted * capacity + rank, n_experts * capacity)
+    # scatter back to original (S*k,) order
+    slot = jnp.zeros_like(slot_sorted).at[order].set(slot_sorted)
+    return slot, flat_p, src
+
+
+def moe_apply(p: dict, x: Array, *, top_k: int, n_experts: int, act: str,
+              capacity_factor: float = 1.25, ep: bool | None = None) -> Array:
+    """x (B, S, d) -> (B, S, d); every (batch) group routed independently.
+
+    Structure: vmapped index-ops (route/scatter/combine stay group-local) with
+    *global* expert einsums in between, so the EP resharding — tokens
+    batch-sharded -> (batch x expert)-sharded — is a single annotated
+    all-to-all over the model axis per direction (DESIGN.md §5)."""
+    b, s, d = x.shape
+    capacity = max(8, int(s * top_k * capacity_factor / n_experts))
+    if ep is None:
+        ep = n_experts % 16 == 0
+
+    def route_and_pack(xg: Array):
+        slot, gate, src = _route_group(xg, p["router"], top_k, capacity, n_experts)
+        buf = jnp.zeros((n_experts * capacity + 1, d), xg.dtype).at[slot].set(xg[src])
+        return buf[:-1], slot, gate, src
+
+    buf, slot, gate, src = jax.vmap(route_and_pack)(x)
+    # pin the scatter output to batch sharding BEFORE any reshape — without
+    # this the SPMD partitioner replicates the dispatch buffer and
+    # all-reduces it every layer (~14 GB/layer/device at llama4 scale; see
+    # EXPERIMENTS.md §Perf iteration 1)
+    buf = _shard3(buf)
+    eb = buf.reshape(b, n_experts, capacity, d)
+    eb = _shard4(eb, ep)  # EP: all-to-all tokens over the model axis
+    if "w_gate" in p:
+        h = act_fn(act, jnp.einsum("becd,edf->becf", eb, p["w_gate"])) * jnp.einsum(
+            "becd,edf->becf", eb, p["w_up"])
+    else:
+        h = act_fn(act, jnp.einsum("becd,edf->becf", eb, p["w_up"]))
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_e = _shard4(out_e, ep=False)  # return tokens to pure batch sharding
+    out_e = out_e.reshape(b, n_experts * capacity, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((b, 1, d), out_e.dtype)], axis=1)
+    out_e = _shard3(out_e)
+
+    def combine(xg, oe, sl, gt, sr):
+        contrib = oe[sl] * gt[:, None].astype(oe.dtype)  # (S*k, d)
+        return jnp.zeros_like(xg).at[sr].add(contrib)
+
+    out = _shard3(jax.vmap(combine)(x, out_e, slot, gate, src))
+    if "shared" in p:
+        from .layers import mlp_apply
+
+        out = out + mlp_apply(p["shared"], x, act)
+    return out
+
+
+def _shard4(t: Array, ep: bool) -> Array:
+    from ..sharding.rules import shard
+
+    return shard(t, "batch", "model" if ep else None, None, None)
+
+
+def _shard3(t: Array) -> Array:
+    from ..sharding.rules import shard
+
+    return shard(t, *(("batch",) + (None,) * (t.ndim - 1)))

@@ -1,0 +1,5 @@
+from .adamw import OptConfig, adamw_init, adamw_update, opt_state_specs
+from .schedules import cosine_schedule, make_schedule, wsd_schedule
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "cosine_schedule", "make_schedule", "wsd_schedule"]

@@ -1,0 +1,84 @@
+"""AdamW with fp32 master weights over bf16 compute params.
+
+Memory layout per parameter (DESIGN.md §5): bf16 param (the model pytree) +
+fp32 master + fp32 mu + fp32 nu, all sharded with the same PartitionSpec as
+the parameter itself — FSDP over `data`, TP over `model`, replicated over
+`pod` (the pod-axis all-reduce is where gradient compression applies,
+repro.runtime.compress).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def lr(self, step):
+        from .schedules import make_schedule
+
+        return make_schedule(self.schedule, peak_lr=self.peak_lr, warmup=self.warmup,
+                             total=self.total_steps)(step)
+
+
+def adamw_init(params: Any) -> dict:
+    # copy=True: fp32 param leaves must not alias the master (the train
+    # step donates the whole TrainState — aliased buffers break donation)
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+    }
+
+
+def opt_state_specs(pspecs: Any) -> dict:
+    """Opt-state PartitionSpecs mirroring the param specs."""
+    from jax.sharding import PartitionSpec as P
+
+    return {"step": P(), "master": pspecs, "mu": pspecs, "nu": pspecs}
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: OptConfig
+                 ) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = cfg.lr(step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1**step.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2**step.astype(jnp.float32))
+        m = m - lr * (mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * m)
+        return m, mu, nu
+
+    flat = jax.tree.map(upd, grads, state["master"], state["mu"], state["nu"])
+    master = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    return new_params, {"step": step, "master": master, "mu": mu, "nu": nu}

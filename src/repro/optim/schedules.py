@@ -1,0 +1,29 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, the MiniCPM
+schedule — arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.05):
+    """Warmup -> flat -> sharp exponential-ish (linear here) decay tail."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    tail = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - floor) * tail)
+    return jnp.where(step < warmup, warm, jnp.where(step < decay_start, peak_lr, dec))
+
+
+def make_schedule(name: str, **kw):
+    fn = {"cosine": cosine_schedule, "wsd": wsd_schedule}[name]
+    return lambda step: fn(step, **kw)

@@ -1,0 +1,5 @@
+from .compress import compressed_psum_bf16, int8_compress, int8_decompress
+from .monitor import FaultTolerantLoop, HeartbeatMonitor
+
+__all__ = ["compressed_psum_bf16", "int8_compress", "int8_decompress",
+           "FaultTolerantLoop", "HeartbeatMonitor"]

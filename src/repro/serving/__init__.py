@@ -1,0 +1,3 @@
+from .engine import ServeEngine, prefill, sample_greedy
+
+__all__ = ["ServeEngine", "prefill", "sample_greedy"]

@@ -1,0 +1,97 @@
+"""Batched serving: prefill + continuous-batching decode with KV/SSM caches.
+
+``prefill_logits`` is the parallel prompt forward the prefill_* dry-run
+shapes lower. ``ServeEngine`` is a minimal continuous-batching loop: fixed
+B slots with *per-slot* positions/lengths (decode_step accepts (B,)
+positions and writes each slot's KV row independently), greedy sampling,
+slot recycling on completion. examples/serve_batched.py drives it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward, init_cache, logits_fn, padded_vocab
+from ..models.config import ArchConfig
+
+Array = jax.Array
+
+
+def sample_greedy(logits: Array, vocab_size: int) -> Array:
+    masked = jnp.where(jnp.arange(logits.shape[-1]) < vocab_size, logits, -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: Array, cache_len: int) -> tuple[Array, dict]:
+    """Sequential prompt pass populating the decode cache for every mixer
+    type (KV rows for attention layers, conv/SSD state for mamba layers).
+    Returns (last-token logits (B, Vp), cache)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, cache_len)
+    vp = padded_vocab(cfg)
+
+    def step(carry, t):
+        cache, _ = carry
+        logits, cache = decode_step(params, cfg, cache, tokens[:, t], t, length=t + 1)
+        return (cache, logits.astype(jnp.float32)), None
+
+    (cache, logits), _ = jax.lax.scan(
+        step, (cache, jnp.zeros((b, vp), jnp.float32)), jnp.arange(s))
+    return logits, cache
+
+
+def prefill_logits(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """Parallel prompt forward -> last-position logits (dry-run path)."""
+    h = forward(params, cfg, batch)
+    return logits_fn(params, cfg, h[:, -1])
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Continuous batching over fixed slots."""
+
+    params: dict
+    cfg: ArchConfig
+    max_len: int
+    batch_slots: int
+
+    def __post_init__(self):
+        self.cache = init_cache(self.cfg, self.batch_slots, self.max_len)
+        self.pos = jnp.zeros((self.batch_slots,), jnp.int32)  # next write index
+        self.tokens = jnp.zeros((self.batch_slots,), jnp.int32)
+        self.active = jnp.zeros((self.batch_slots,), bool)
+        self.outputs: list[list[int]] = [[] for _ in range(self.batch_slots)]
+        self._step = jax.jit(
+            lambda p, c, t, pos, ln: decode_step(p, self.cfg, c, t, pos, length=ln))
+
+    def add_request(self, slot: int, prompt: list[int]) -> None:
+        """Feed a prompt through the decode path into this slot's cache."""
+        for tok in prompt:
+            toks = self.tokens.at[slot].set(tok)
+            logits, self.cache = self._step(self.params, self.cache, toks,
+                                            self.pos, self.pos + 1)
+            self.pos = self.pos.at[slot].add(1)
+        self.tokens = self.tokens.at[slot].set(
+            int(sample_greedy(logits[slot], self.cfg.vocab_size)))
+        self.active = self.active.at[slot].set(True)
+        self.outputs[slot] = [int(self.tokens[slot])]
+
+    def step(self) -> Array:
+        """One decode step for all slots (inactive slots decode garbage that
+        is simply not recorded — the standard padded-slot trick)."""
+        logits, self.cache = self._step(self.params, self.cache, self.tokens,
+                                        self.pos, self.pos + 1)
+        nxt = sample_greedy(logits, self.cfg.vocab_size)
+        self.pos = self.pos + self.active.astype(jnp.int32)
+        self.tokens = jnp.where(self.active, nxt, self.tokens)
+        for i in range(self.batch_slots):
+            if bool(self.active[i]):
+                self.outputs[i].append(int(nxt[i]))
+        return nxt
+
+    def finish(self, slot: int) -> list[int]:
+        self.active = self.active.at[slot].set(False)
+        return self.outputs[slot]

@@ -1,0 +1,3 @@
+from .train import TrainState, make_train_step, train_state_init
+
+__all__ = ["TrainState", "make_train_step", "train_state_init"]

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def clustered_data():
+    key = jax.random.PRNGKey(0)
+    kc, ka, kn = jax.random.split(key, 3)
+    n, d = 900, 6
+    centers = jax.random.normal(kc, (8, d)) * 3.0
+    assign = jax.random.randint(ka, (n,), 0, 8)
+    x = centers[assign] + 0.5 * jax.random.normal(kn, (n, d))
+    return x

@@ -1,0 +1,100 @@
+"""Attention variants: chunked==exact, decode==last-row, BLESS-Nystrom
+approximation behaviour, leverage-score KV compression."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attention, bless_compress_cache,
+                                    bless_topm_landmarks, decode_attention,
+                                    nystrom_attention, rls_scores_one_rung)
+
+
+def _qkv(s=96, hq=4, hkv=2, d=32, b=2, seed=0, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d)) * scale
+    k = jax.random.normal(ks[1], (b, s, hkv, d)) * scale
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    return q, k, v
+
+
+def _exact(q, k, v, causal):
+    b, s, hq, d = q.shape
+    g = hq // k.shape[2]
+    kf = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3)
+    vf = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.transpose(0, 2, 1, 3), kf) / math.sqrt(d)
+    if causal:
+        sc = jnp.where(jnp.tril(jnp.ones((s, s), bool)), sc, -jnp.inf)
+    return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), vf).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("chunk", [16, 33, 96, 512])
+def test_chunked_attention_exact(causal, chunk):
+    q, k, v = _qkv()
+    out = attention(q, k, v, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(out, _exact(q, k, v, causal), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_is_last_row():
+    q, k, v = _qkv(s=40)
+    full = _exact(q, k, v, causal=True)
+    out = decode_attention(q[:, -1:], k, v, length=jnp.asarray(40))
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_per_slot_lengths():
+    q, k, v = _qkv(s=40, b=2)
+    lens = jnp.asarray([10, 40])
+    out = decode_attention(q[:, -1:], k, v, length=lens)
+    short = decode_attention(q[:1, -1:], k[:1, :10], v[:1, :10])
+    np.testing.assert_allclose(out[0], short[0], rtol=2e-4, atol=2e-4)
+
+
+def test_rls_scores_valid():
+    keys = jax.random.normal(jax.random.PRNGKey(0), (128, 16))
+    s = rls_scores_one_rung(keys, m_pilot=32, lam=1e-3)
+    assert s.shape == (128,)
+    assert float(s.min()) > 0 and float(s.max()) <= 1.0
+
+
+def test_nystrom_error_decreases_with_landmarks():
+    q, k, v = _qkv(s=256, scale=0.5)
+    exact = attention(q, k, v, causal=False)
+    errs = []
+    for m in (16, 64, 192):
+        approx = nystrom_attention(q, k, v, landmarks=m)
+        errs.append(float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact)))
+    assert errs[2] < errs[0]
+    assert errs[2] < 0.2
+
+
+def test_nystrom_beats_uniform_landmarks_on_skewed_keys():
+    """The paper's point: leverage-score landmarks capture rare-but-
+    important directions that uniform sampling misses."""
+    key = jax.random.PRNGKey(0)
+    s, d = 256, 16
+    # 95% of keys in a tight cluster, 5% outliers carrying distinct values
+    base = jax.random.normal(key, (s, d)) * 0.05
+    out_idx = jnp.arange(0, s, 20)
+    outliers = jax.random.normal(jax.random.PRNGKey(1), (out_idx.shape[0], d)) * 2.0
+    kk = base.at[out_idx].set(outliers)
+    scores = rls_scores_one_rung(kk, m_pilot=64, lam=1e-3)
+    top = bless_topm_landmarks(kk, 16, m_pilot=64, lam=1e-3)
+    hit = jnp.isin(top, out_idx).mean()
+    assert float(hit) > 0.4  # outliers are high-leverage and get picked
+    assert float(scores[out_idx].mean()) > 2.0 * float(scores.mean())
+
+
+def test_bless_compress_cache_shapes_and_selection():
+    b, s, h, d = 2, 128, 2, 16
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d)) * 0.05
+    v = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    k = k.at[:, 7].set(5.0)  # one very distinctive key
+    kc, vc = bless_compress_cache(k, v, m=16, m_pilot=32)
+    assert kc.shape == (b, 16, h, d) and vc.shape == (b, 16, h, d)
+    # the distinctive key must survive compression
+    assert float(jnp.abs(kc).max()) >= 4.9

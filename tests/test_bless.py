@@ -1,0 +1,81 @@
+"""BLESS / BLESS-R: Thm. 1-style accuracy and size bounds, ladder
+properties, baselines sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bless, bless_r, exact_rls, lam_ladder, make_kernel,
+                        recursive_rls, squeak, theory_constants, two_pass)
+from repro.core.leverage import approx_rls_all
+
+KERN = make_kernel("gaussian", sigma=2.0)
+LAM = 1e-3
+
+
+def test_lam_ladder():
+    lams = lam_ladder(1e-3, 1.0, 2.0)
+    assert lams[-1] == 1e-3
+    assert all(a > b for a, b in zip(lams, lams[1:]))
+    assert len(lams) == 10  # ceil(log2(1000))
+
+
+def test_theory_constants_reproduce_thm1():
+    q1, q2 = theory_constants(t=1.0, q=2.0, n=1000, h=10, delta=0.1)
+    assert q2 >= 12 * 2 * 9 * 2 * np.log(12 * 10 * 1000 / 0.1) - 1
+    assert q1 == pytest.approx(5 * q2 / (2 * 2))
+
+
+@pytest.mark.parametrize("algo", [bless, bless_r])
+def test_multiplicative_accuracy(clustered_data, algo):
+    """Thm. 1(a): scores within a constant multiplicative band of exact
+    (practical constants -> a loose 3x band checked at the 2nd/98th pct)."""
+    x = clustered_data
+    ell = exact_rls(KERN, x, LAM)
+    kw = dict(q2=4.0) if algo is bless_r else dict(q1=4.0, q2=4.0)
+    res = algo(jax.random.PRNGKey(0), x, KERN, LAM, **kw)
+    racc = np.asarray(res.scores(KERN, x) / ell)
+    assert 0.8 < racc.mean() < 1.4
+    assert np.quantile(racc, 0.02) > 1 / 3.0
+    assert np.quantile(racc, 0.98) < 3.0
+
+
+def test_thm1b_size_bound(clustered_data):
+    """|J_h| stays O(q2 d_eff(lam_h)) along the whole path."""
+    x = clustered_data
+    q2 = 3.0
+    res = bless(jax.random.PRNGKey(1), x, KERN, LAM, q1=3.0, q2=q2)
+    for lvl in res.levels[2:]:
+        deff_h = float(jnp.sum(exact_rls(KERN, x, lvl.lam)))
+        assert lvl.m_h <= q2 * max(10 * 2.0, 3 * 2.0 * deff_h) + 8, (
+            lvl.lam, lvl.m_h, deff_h)
+
+
+def test_path_accuracy(clustered_data):
+    """The 'whole path at once' claim: intermediate levels are accurate at
+    their own lam_h, not just the last one."""
+    x = clustered_data
+    res = bless(jax.random.PRNGKey(2), x, KERN, LAM, q1=4.0, q2=4.0)
+    for lvl in (res.levels[-3], res.levels[-1]):
+        ell_h = exact_rls(KERN, x, lvl.lam)
+        s = approx_rls_all(KERN, x, lvl.centers, jnp.asarray(lvl.lam))
+        racc = np.asarray(s / ell_h)
+        assert 0.6 < np.median(racc) < 1.8, lvl.lam
+
+
+def test_bless_deterministic_given_key(clustered_data):
+    r1 = bless(jax.random.PRNGKey(3), clustered_data, KERN, LAM)
+    r2 = bless(jax.random.PRNGKey(3), clustered_data, KERN, LAM)
+    assert r1.final.m_h == r2.final.m_h
+    assert bool(jnp.all(r1.final.centers.idx == r2.final.centers.idx))
+
+
+@pytest.mark.parametrize("baseline", [two_pass, recursive_rls, squeak])
+def test_baselines_produce_usable_scores(clustered_data, baseline):
+    x = clustered_data
+    ell = exact_rls(KERN, x, LAM)
+    kw = {"m2": 300} if baseline is two_pass else {"m_cap": 400}
+    cs = baseline(jax.random.PRNGKey(4), x, KERN, LAM, **kw)
+    s = approx_rls_all(KERN, x, cs, jnp.asarray(LAM))
+    racc = np.asarray(s / ell)
+    assert 0.5 < np.median(racc) < 2.0

@@ -1,0 +1,129 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle, swept over
+shapes (incl. non-divisible tails) and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gram.ops import gram, gram_reference
+from repro.kernels.quadform.ops import quadform, quadform_reference
+from repro.kernels.falkon_matvec.ops import falkon_matvec
+from repro.kernels.falkon_matvec.ref import falkon_matvec_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_attention_reference
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,d", [(256, 256, 128), (300, 130, 17), (64, 512, 64), (1000, 77, 3)])
+@pytest.mark.parametrize("kind", ["gaussian", "laplacian", "linear"])
+def test_gram_shapes(n, m, d, kind):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    out = gram(x, z, 1.3, kind=kind, interpret=True)
+    ref = gram_reference(x, z, 1.3, kind=kind)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (257, 40)).astype(dtype)
+    z = jax.random.normal(jax.random.PRNGKey(1), (129, 40)).astype(dtype)
+    out = gram(x, z, 2.0, interpret=True).astype(jnp.float32)
+    ref = gram_reference(x, z, 2.0).astype(jnp.float32)
+    np.testing.assert_allclose(out, ref, **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,m", [(256, 256), (300, 200), (100, 515), (1024, 64)])
+def test_quadform_shapes(n, m):
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, m))
+    w = jax.random.normal(jax.random.PRNGKey(1), (m, m))
+    w = w @ w.T / m
+    out = quadform(g, w, interpret=True)
+    ref = quadform_reference(g, w)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-4)
+
+
+@pytest.mark.parametrize("n,m,d,bn", [(512, 128, 128, 256), (700, 130, 17, 256), (256, 515, 8, 128)])
+def test_falkon_matvec_shapes(n, m, d, bn):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (m,))
+    out = falkon_matvec(x, z, v, 1.5, interpret=True, bn=bn)
+    ref = falkon_matvec_ref(x, z, v, 1.0 / (2 * 1.5**2))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * float(jnp.abs(ref).max()))
+
+
+@pytest.mark.parametrize(
+    "hq,hkv,s,d,causal",
+    [(4, 4, 256, 128, True), (8, 2, 300, 64, True), (8, 1, 512, 80, True),
+     (4, 4, 300, 64, False), (2, 2, 128, 128, False)],
+)
+def test_flash_attention_shapes(hq, hkv, s, d, causal):
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, hq, s, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, hkv, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, hkv, s, d))
+    out = flash_attention(q, k, v, causal=causal, bq=128, bk=128, interpret=True)
+    ref = flash_attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 128)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 128)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 128)).astype(dtype)
+    out = flash_attention(q, k, v, interpret=True).astype(jnp.float32)
+    ref = flash_attention_reference(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(out, ref, **_tol(dtype))
+
+
+def test_falkon_matvec_plugs_into_cg():
+    """The fused kernel is a drop-in knm_quadratic for falkon_fit."""
+    from repro.core import falkon_fit, make_kernel, nystrom_krr
+    from repro.kernels.falkon_matvec.ops import make_knm_quadratic_op
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.sin(x[:, 0])
+    z = x[:80]
+    kern = make_kernel("gaussian", sigma=1.5)
+    op = make_knm_quadratic_op(x, z, 1.5, interpret=True, bn=256)
+    fk = falkon_fit(kern, x, y, z, 1e-3, iters=25, knm_quadratic=op)
+    ny = nystrom_krr(kern, x, y, z, 1e-3)
+    pf, pn = fk.predict(x), ny.predict(x)
+    assert float(jnp.linalg.norm(pf - pn) / jnp.linalg.norm(pn)) < 1e-3
+
+
+@pytest.mark.parametrize("s,chunk,h,p,n", [(96, 32, 4, 8, 16), (80, 32, 2, 16, 8),
+                                           (128, 128, 8, 8, 16)])
+def test_ssd_kernel_shapes(s, chunk, h, p, n):
+    from repro.kernels.ssd.ops import ssd, ssd_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (2, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (2, s, n)) * 0.5
+    c = jax.random.normal(ks[4], (2, s, n)) * 0.5
+    y, st = ssd(x, dt, a, b, c, chunk=chunk, interpret=True)
+    yr, str_ = ssd_reference(x, dt, a, b, c, chunk=16)  # 16 divides every s
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st, str_, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_dtypes(dtype):
+    from repro.kernels.ssd.ops import ssd, ssd_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (1, 64, 4, 8)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 4))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    b = (jax.random.normal(ks[3], (1, 64, 16)) * 0.5).astype(dtype)
+    c = (jax.random.normal(ks[4], (1, 64, 16)) * 0.5).astype(dtype)
+    y, _ = ssd(x, dt, a, b, c, chunk=32, interpret=True)
+    yr, _ = ssd_reference(x, dt, a, b, c, chunk=32)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(y.astype(jnp.float32), yr.astype(jnp.float32), **tol)

@@ -1,0 +1,73 @@
+"""Leverage-score invariants (incl. hypothesis property tests):
+Prop. 1 exactness, Lemma 3 monotonicity, score range, d_eff identities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CenterSet, approx_rls_all, exact_rls, make_kernel,
+                        uniform_center_set)
+
+KERN = make_kernel("gaussian", sigma=2.0)
+
+
+def _x(n, d=5, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def test_scores_in_range_and_sum(clustered_data):
+    lam = 1e-3
+    ell = exact_rls(KERN, clustered_data, lam)
+    n = clustered_data.shape[0]
+    assert float(ell.min()) >= 0.0 and float(ell.max()) <= 1.0
+    deff = float(jnp.sum(ell))
+    assert 0 < deff < min(n, 1.0 / lam + 1)
+
+
+def test_prop1_full_set_is_exact(clustered_data):
+    """Eq. 3 with J = [n], A = I reproduces the exact scores (Prop. 1)."""
+    x = clustered_data[:300]
+    n = x.shape[0]
+    lam = 1e-3
+    cs = CenterSet(
+        idx=jnp.arange(n, dtype=jnp.int32),
+        weight=jnp.ones((n,), jnp.float32),
+        mask=jnp.ones((n,), bool),
+        count=jnp.asarray(n, jnp.int32),
+    )
+    approx = approx_rls_all(KERN, x, cs, jnp.asarray(lam))
+    exact = exact_rls(KERN, x, lam)
+    np.testing.assert_allclose(approx, exact, rtol=2e-3, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lam=st.floats(1e-4, 1e-1), factor=st.floats(1.5, 20.0))
+def test_lemma3_monotonicity(lam, factor):
+    """l(i, lam') <= l(i, lam) <= (lam'/lam) l(i, lam') for lam < lam'."""
+    x = _x(200)
+    lam_hi = lam * factor
+    lo = exact_rls(KERN, x, lam)
+    hi = exact_rls(KERN, x, lam_hi)
+    assert bool(jnp.all(hi <= lo + 1e-6))
+    assert bool(jnp.all(lo <= factor * hi + 1e-6))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(50, 300), m=st.integers(10, 49), seed=st.integers(0, 10**6))
+def test_uniform_estimator_bounds(n, m, seed):
+    """Nystrom RLS over-estimates never exceed the trivial K_ii/(lam n) cap
+    and stay positive, for any uniform center set."""
+    x = _x(n, seed=seed % 7)
+    lam = 1e-2
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (m,), 0, n)
+    cs = uniform_center_set(idx, n, 64)
+    s = approx_rls_all(KERN, x, cs, jnp.asarray(lam))
+    assert bool(jnp.all(s > 0))
+    assert bool(jnp.all(s <= 1.0 / (lam * n) + 1e-6))
+
+
+def test_deff_decreases_with_lam(clustered_data):
+    deffs = [float(jnp.sum(exact_rls(KERN, clustered_data, lam)))
+             for lam in (1e-1, 1e-2, 1e-3)]
+    assert deffs[0] < deffs[1] < deffs[2]

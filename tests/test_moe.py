@@ -1,0 +1,68 @@
+"""MoE dispatch: sort-based capacity routing vs a naive per-token oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import act_fn
+from repro.models.moe import moe_apply, moe_init, _route_group
+
+
+def _naive_moe(p, x, top_k, n_experts, act):
+    """Per-token loop oracle, no capacity limit."""
+    b, s, d = x.shape
+    out = np.zeros((b, s, d), np.float32)
+    logits = np.asarray(x.astype(jnp.float32) @ p["router"])
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), -1))
+    for bi in range(b):
+        for t in range(s):
+            idx = np.argsort(-probs[bi, t])[:top_k]
+            w = probs[bi, t, idx]
+            w = w / w.sum()
+            for e, wi in zip(idx, w):
+                xe = np.asarray(x[bi, t], np.float32)
+                if "w_gate" in p:
+                    h = (np.asarray(act_fn(act, jnp.asarray(xe @ np.asarray(p["w_gate"][e], np.float32))))
+                         * (xe @ np.asarray(p["w_up"][e], np.float32)))
+                else:
+                    h = np.asarray(act_fn(act, jnp.asarray(xe @ np.asarray(p["w_up"][e], np.float32))))
+                out[bi, t] += wi * (h @ np.asarray(p["w_down"][e], np.float32))
+    return out
+
+
+@pytest.mark.parametrize("top_k,n_experts", [(1, 4), (2, 8)])
+def test_moe_matches_naive_with_big_capacity(top_k, n_experts):
+    b, s, d, ff = 2, 16, 8, 16
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, d, ff, n_experts, "swiglu", dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32)
+    got = moe_apply(p, x, top_k=top_k, n_experts=n_experts, act="swiglu",
+                    capacity_factor=float(n_experts))  # no drops
+    want = _naive_moe(p, x, top_k, n_experts, "swiglu")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_drops_overflow_tokens():
+    """All tokens prefer one expert; only `capacity` survive."""
+    s, d, e = 32, 4, 4
+    p = moe_init(jax.random.PRNGKey(0), d, 8, e, "gelu", dtype=jnp.float32)
+    p["router"] = jnp.zeros((d, e)).at[:, 0].set(10.0)  # everyone -> expert 0
+    x = jnp.ones((1, s, d), jnp.float32)
+    slot, gate, src = _route_group(x[0], p["router"], 1, 4, e)
+    kept = int(jnp.sum(slot < e * 4))
+    assert kept == 4  # capacity
+    out = moe_apply(p, x, top_k=1, n_experts=e, act="gelu", capacity_factor=0.125)
+    # dropped tokens contribute zero
+    nz = jnp.sum(jnp.any(jnp.abs(out[0]) > 1e-6, axis=-1))
+    assert int(nz) <= 8
+
+
+def test_shared_expert_added():
+    b, s, d, ff = 1, 8, 8, 16
+    p = moe_init(jax.random.PRNGKey(0), d, ff, 4, "swiglu", shared_ff=16,
+                 dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32)
+    with_shared = moe_apply(p, x, top_k=1, n_experts=4, act="swiglu")
+    p2 = {k: v for k, v in p.items() if k != "shared"}
+    without = moe_apply(p2, x, top_k=1, n_experts=4, act="swiglu")
+    assert float(jnp.abs(with_shared - without).max()) > 1e-6

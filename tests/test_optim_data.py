@@ -1,0 +1,73 @@
+"""Optimizer, schedules, data pipeline determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticLM, TokenPipeline
+from repro.optim import OptConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+
+
+def test_adamw_matches_scalar_reference():
+    cfg = OptConfig(peak_lr=1e-2, warmup=0, total_steps=100, schedule="cosine",
+                    weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([1.0], jnp.float32)}
+    state = adamw_init(params)
+    g = jnp.asarray([0.5], jnp.float32)
+    params, state = adamw_update(params, {"w": g}, state, cfg)
+    # step 1: mu_hat = g, nu_hat = g^2 -> update = lr * g/|g| = lr
+    lr1 = float(cfg.lr(1))
+    np.testing.assert_allclose(float(params["w"][0]), 1.0 - lr1 * (0.5 / (0.5 + 1e-8)),
+                               rtol=1e-5)
+
+
+def test_grad_clip_applies():
+    cfg = OptConfig(peak_lr=1e-2, warmup=0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    s1 = adamw_init(params)
+    p1, _ = adamw_update(params, {"w": jnp.full((4,), 100.0)}, s1, cfg)
+    s2 = adamw_init(params)
+    p2, _ = adamw_update(params, {"w": jnp.full((4,), 1000.0)}, s2, cfg)
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-5)  # both clipped
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000))
+def test_schedules_bounded_positive(step):
+    for fn in (cosine_schedule, wsd_schedule):
+        lr = float(fn(step, peak_lr=3e-4, warmup=100, total=10_000))
+        assert 0.0 <= lr <= 3e-4 + 1e-9
+
+
+def test_wsd_shape():
+    kw = dict(peak_lr=1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(wsd_schedule(5, **kw)) < 1.0  # warming
+    assert float(wsd_schedule(50, **kw)) == 1.0  # stable
+    assert float(wsd_schedule(99, **kw)) < 0.3  # decaying
+
+
+def test_pipeline_determinism_and_resume():
+    p1 = SyntheticLM(512, batch=4, seq=16, seed=3)
+    p2 = SyntheticLM(512, batch=4, seq=16, seed=3)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    assert bool(jnp.all(b1["tokens"] == b2["tokens"]))
+    assert not bool(jnp.all(p1.batch_at(18)["tokens"] == b1["tokens"]))
+    # labels are next-token shifted view of the same stream
+    assert bool(jnp.all(b1["labels"][:, :-1] == b1["tokens"][:, 1:]))
+
+
+def test_synthetic_lm_is_learnable():
+    """The affine rule is visible: next token equals perm[tok] 90% of times."""
+    p = SyntheticLM(128, batch=8, seq=64, seed=0, noise=0.1)
+    b = p.batch_at(0)
+    perm = p._rule()
+    match = jnp.mean((perm[b["tokens"]] == b["labels"]).astype(jnp.float32))
+    assert float(match) > 0.8
+
+
+def test_token_pipeline_shapes():
+    p = TokenPipeline(1000, batch=2, seq=8)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 8) and b["labels"].shape == (2, 8)
+    assert int(b["tokens"].max()) < 1000

@@ -1,0 +1,83 @@
+"""Roofline plumbing: the analytic FLOP model cross-checked against XLA's
+counter on an unrolled (scan-free trip-count=1) config, and the collective
+parser on synthetic HLO."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.launch.cost_model import forward_flops, step_costs
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+
+
+def test_analytic_vs_xla_flops_dense():
+    """1-group smoke config, remat off, single batch: XLA counts the scan
+    body once == actual (trip count 1); analytic model must land within
+    ~35% (XLA also counts exp/mask flops we don't)."""
+    cfg = dataclasses.replace(smoke(get_config("phi3-mini-3.8b")),
+                              n_layers=1, remat=False, attn_chunk=64)
+    from repro.models import forward, init_params
+
+    b, s = 2, 64
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    bat = {"tokens": jnp.zeros((b, s), jnp.int32)}
+    comp = jax.jit(lambda p, bt: forward(p, cfg, bt)).lower(params, bat).compile()
+    xla = float(comp.cost_analysis().get("flops", 0.0))
+    # forward_flops includes the logits matmul; forward() does not
+    from repro.models.model import padded_vocab
+
+    ana = forward_flops(cfg, b, s).flops_fwd - 2 * b * s * cfg.d_model * padded_vocab(cfg)
+    assert 0.5 < ana / xla < 1.5, (ana, xla)
+
+
+def test_step_costs_train_factor():
+    cfg = smoke(get_config("phi3-mini-3.8b"))
+    f_fwd = forward_flops(cfg, 4, 64).flops_fwd
+    train = step_costs(cfg, "train", 4, 64, chips=1)
+    assert train["flops_per_device"] == pytest.approx(4 * f_fwd)
+
+
+def test_moe_counts_active_not_total():
+    cfg = get_config("llama4-scout-17b-a16e")
+    dense_equiv = dataclasses.replace(
+        cfg, n_experts=0, top_k=0, shared_expert_ff=0)
+    fm = forward_flops(cfg, 1, 4096).flops_fwd
+    fd = forward_flops(dense_equiv, 1, 4096).flops_fwd
+    # 16 experts top-1 at cf=1.25 + shared expert ~= 2.3x one dense mlp,
+    # nowhere near 16x
+    assert fm < 3.5 * fd
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[2,3,4]") == 48
+    assert _shape_bytes("f32[10]{0}") == 40
+    assert _shape_bytes("(f32[4], bf16[8])") == 32
+
+
+def test_collective_parser_trip_counts():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  ROOT %lt = pred[] compare(...)
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[64] get-tuple-element(%w), index=1
+}
+"""
+    coll = collective_bytes(hlo, cpu_bf16_correction=False)
+    assert coll["all-gather"] == 128 * 4
+    assert coll["all-reduce"] == 5 * 64 * 4  # trip-count multiplied
+    # with the CPU bf16-normalization correction, f32 counts at half
+    coll2 = collective_bytes(hlo, cpu_bf16_correction=True)
+    assert coll2["all-reduce"] == 5 * 64 * 2

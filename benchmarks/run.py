@@ -9,9 +9,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
 CPU-scale sizes; every timing is post-warmup (jit cache hot).
+
+``--backend {jnp,pallas,sharded}`` pins the kernel-operator backend for the
+BLESS/FALKON benches (default: the platform heuristic).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -56,7 +60,7 @@ def _racc_stats(scores, ell):
     return (float(r.mean()), float(np.quantile(r, 0.05)), float(np.quantile(r, 0.95)))
 
 
-def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3) -> None:
+def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3, backend=None) -> None:
     x = _data(n)
     kern = make_kernel("gaussian", sigma=2.0)
     ell = exact_rls(kern, x, lam)
@@ -70,12 +74,12 @@ def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3) -> None:
         jax.block_until_ready(out.idx if hasattr(out, "idx") else out)
         return out, (time.perf_counter() - t0) * 1e6
 
-    res, us = timed(lambda: bless(key, x, kern, lam, q2=4.0, q1=4.0))
-    m, q5, q95 = _racc_stats(res.scores(kern, x), ell)
+    res, us = timed(lambda: bless(key, x, kern, lam, q2=4.0, q1=4.0, backend=backend))
+    m, q5, q95 = _racc_stats(res.scores(kern, x, backend=backend), ell)
     emit("fig1.bless", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
 
-    res, us = timed(lambda: bless_r(key, x, kern, lam, q2=4.0))
-    m, q5, q95 = _racc_stats(res.scores(kern, x), ell)
+    res, us = timed(lambda: bless_r(key, x, kern, lam, q2=4.0, backend=backend))
+    m, q5, q95 = _racc_stats(res.scores(kern, x, backend=backend), ell)
     emit("fig1.bless_r", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
 
     mref = res.final.m_h
@@ -92,13 +96,13 @@ def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3) -> None:
     emit("fig1.uniform", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={mref}")
 
 
-def bench_fig2_runtime_scaling(lam: float = 2e-3) -> None:
+def bench_fig2_runtime_scaling(lam: float = 2e-3, backend=None) -> None:
     kern = make_kernel("gaussian", sigma=2.0)
     key = jax.random.PRNGKey(0)
     for n in (1000, 2000, 4000, 8000):
         x = _data(n)
         for name, fn in (
-            ("bless", lambda: bless(key, x, kern, lam, q2=3.0, q1=3.0)),
+            ("bless", lambda: bless(key, x, kern, lam, q2=3.0, q1=3.0, backend=backend)),
             ("squeak", lambda: squeak(key, x, kern, lam, m_cap=600)),
             ("rrls", lambda: recursive_rls(key, x, kern, lam, m_cap=600)),
         ):
@@ -109,7 +113,7 @@ def bench_fig2_runtime_scaling(lam: float = 2e-3) -> None:
             emit(f"fig2.{name}.n{n}", (time.perf_counter() - t0) * 1e6, f"n={n}")
 
 
-def bench_table1_complexity() -> None:
+def bench_table1_complexity(backend=None) -> None:
     """|J_H| tracks q2*d_eff(lam) across lam — the Table 1 / Thm 1(b) claim."""
     n = 2000
     x = _data(n)
@@ -119,19 +123,20 @@ def bench_table1_complexity() -> None:
     for lam in (1e-2, 3e-3, 1e-3):
         deff = float(jnp.sum(exact_rls(kern, x, lam)))
         t0 = time.perf_counter()
-        res = bless(key, x, kern, lam, q2=q2, q1=3.0)
+        res = bless(key, x, kern, lam, q2=q2, q1=3.0, backend=backend)
         us = (time.perf_counter() - t0) * 1e6
         emit(f"table1.lam{lam:g}", us,
              f"deff={deff:.1f};M={res.final.m_h};q2*deff={q2 * deff:.1f};H={len(res.levels)}")
 
 
-def bench_fig45_falkon(n: int = 3000, m_target: int = 250) -> None:
+def bench_fig45_falkon(n: int = 3000, m_target: int = 250, backend=None) -> None:
     """Error per CG iteration: BLESS centers+weights vs uniform centers."""
     x, y, xte, yte = _classif(n, 800)
     kern = make_kernel("gaussian", sigma=2.0)
     lam_falkon, lam_bless = 1e-5, 1e-3
 
-    res = bless(jax.random.PRNGKey(0), x, kern, lam_bless, q2=3.0, m_cap=m_target)
+    res = bless(jax.random.PRNGKey(0), x, kern, lam_bless, q2=3.0, m_cap=m_target,
+                backend=backend)
     mh = res.final.m_h
     idx = res.final.centers.idx[:mh]
     a = res.final.centers.weight[:mh]
@@ -144,7 +149,8 @@ def bench_fig45_falkon(n: int = 3000, m_target: int = 250) -> None:
             errs.append(float(jnp.mean(pred != yte)))
 
         t0 = time.perf_counter()
-        falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20, callback=cb)
+        falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20,
+                   backend=backend, callback=cb)
         us = (time.perf_counter() - t0) * 1e6
         best5 = min(errs[:5])
         emit(f"fig45.{tag}", us, f"err@5={best5:.4f};err@20={errs[-1]:.4f};M={centers.shape[0]}")
@@ -155,17 +161,17 @@ def bench_fig45_falkon(n: int = 3000, m_target: int = 250) -> None:
     err_curve(x[ku], None, "falkon_uni")
 
 
-def bench_fig3_lambda_stability(n: int = 2000) -> None:
+def bench_fig3_lambda_stability(n: int = 2000, backend=None) -> None:
     x, y, xte, yte = _classif(n, 600)
     kern = make_kernel("gaussian", sigma=2.0)
-    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=250)
+    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=250, backend=backend)
     mh = res.final.m_h
     zc, a = x[res.final.centers.idx[:mh]], res.final.centers.weight[:mh]
     ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
     for lam in (1e-3, 1e-5, 1e-7):
         for tag, (c, ad) in {"bless": (zc, a), "uni": (x[ku], None)}.items():
             t0 = time.perf_counter()
-            model = falkon_fit(kern, x, y, c, lam, a_diag=ad, iters=5)
+            model = falkon_fit(kern, x, y, c, lam, a_diag=ad, iters=5, backend=backend)
             err = float(jnp.mean(jnp.sign(model.predict(xte)) != yte))
             emit(f"fig3.{tag}.lam{lam:g}", (time.perf_counter() - t0) * 1e6,
                  f"cerr@5it={err:.4f}")
@@ -205,12 +211,17 @@ def bench_lm_steps() -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
+                    default="auto", help="kernel-operator backend for BLESS/FALKON")
+    args = ap.parse_args()
+    backend = None if args.backend == "auto" else args.backend
     print("name,us_per_call,derived")
-    bench_fig1_raccuracy()
-    bench_fig2_runtime_scaling()
-    bench_table1_complexity()
-    bench_fig45_falkon()
-    bench_fig3_lambda_stability()
+    bench_fig1_raccuracy(backend=backend)
+    bench_fig2_runtime_scaling(backend=backend)
+    bench_table1_complexity(backend=backend)
+    bench_fig45_falkon(backend=backend)
+    bench_fig3_lambda_stability(backend=backend)
     bench_lm_steps()
 
 

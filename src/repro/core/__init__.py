@@ -1,7 +1,23 @@
 """Core paper contribution: BLESS / BLESS-R leverage score sampling and the
 FALKON-BLESS kernel ridge regression solver, plus the baselines they are
-measured against."""
-from .gram import Kernel, make_kernel, blocked_cross, sq_dists
+measured against. All hot contractions go through the kernel-operator
+``Backend`` seam (jnp / Pallas / shard_map) in ``repro.core.backend``."""
+from .gram import (
+    Kernel,
+    make_kernel,
+    blocked_cross,
+    sq_dists,
+    backend_names,
+    register_backend,
+    resolve_backend,
+)
+from .backend import (
+    Backend,
+    JnpBackend,
+    PallasBackend,
+    ShardedBackend,
+    default_backend,
+)
 from .leverage import (
     CenterSet,
     approx_rls,
@@ -26,6 +42,8 @@ from .nystrom import exact_krr, nystrom_krr
 
 __all__ = [
     "Kernel", "make_kernel", "blocked_cross", "sq_dists",
+    "Backend", "JnpBackend", "PallasBackend", "ShardedBackend",
+    "backend_names", "default_backend", "register_backend", "resolve_backend",
     "CenterSet", "approx_rls", "approx_rls_all", "effective_dim", "exact_rls",
     "uniform_center_set",
     "BlessLevel", "BlessResult", "bless", "bless_r", "lam_ladder", "theory_constants",

@@ -1,0 +1,336 @@
+"""Kernel-operator backends — the single seam for every hot contraction.
+
+Three contractions dominate the paper's cost story (BLESS Alg. 1/2 levels,
+the Eq. 3 scorer, FALKON's CG in Sec. 3):
+
+  * ``gram_block``      — a K(X, Z) block (every ladder level, K_MM, predict)
+  * ``masked_quadform`` — Eq. 3's inner term  K_Ji^T (K_JJ + lam n A)^{-1} K_Ji
+  * ``knm_quadratic`` / ``knm_t`` — the CG matvec K_nM^T K_nM v and its
+    right-hand side K_nM^T y, never materializing K_nM
+
+Each ``Backend`` serves all of them:
+
+  * ``JnpBackend``     — pure-jnp streaming reference. jit-safe (its methods
+    can be traced with the kernel bandwidth as a tracer), so it is the one
+    used inside the jitted Eq. 3 scorer. Default on CPU.
+  * ``PallasBackend``  — the fused Pallas TPU kernels under
+    ``repro.kernels.{gram,quadform,falkon_matvec}``; interpret-mode off-TPU
+    so CI exercises the exact production code path.
+  * ``ShardedBackend`` — shard_map data-parallel over the local device mesh
+    (``repro.core.distributed``); X rows sharded, (M, M) state replicated.
+
+Backends are small frozen dataclasses: hashable (usable as static jit
+arguments) and comparable by configuration, so the jit cache keys correctly.
+Selection is by instance, by registry name ("jnp" | "pallas" | "sharded"),
+or ``None`` for the ``default_backend()`` platform + problem-size heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, ClassVar
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..kernels.falkon_matvec import ops as falkon_ops
+from ..kernels.gram import ops as gram_ops
+from ..kernels.quadform import ops as quadform_ops
+from .gram import Kernel, blocked_cross, register_backend
+from .leverage import _chol_with_jitter
+
+Array = jax.Array
+KnmQuadraticOp = Callable[[Array], Array]
+
+# ---------------------------------------------------------------------------
+# Block-size tables.
+#
+# jnp streamer: rows per lax.scan block — sized so a (block, m) Gram slab
+# stays comfortably in cache (CPU) / HBM working set (accelerators).
+# Pallas: (bn, bm) VMEM tiles by problem size; small problems take small
+# tiles so interpret-mode CI isn't dominated by padding, large ones take the
+# MXU-saturating 512x256 shape (working set ~< 4 MB at d <= 2048).
+# ---------------------------------------------------------------------------
+
+STREAM_BLOCK = {"cpu": 2048, "gpu": 8192, "tpu": 8192}
+
+PALLAS_GRAM_TILES = ((1024, (128, 128)), (8192, (256, 256)), (None, (512, 256)))
+PALLAS_QUADFORM_TILES = ((1024, (128, 128)), (8192, (256, 256)), (None, (256, 256)))
+PALLAS_MATVEC_BN = ((4096, 256), (None, 512))
+
+_PALLAS_MIN_ROWS = 256  # below this a single jnp block beats tile padding
+_SHARD_MIN_ROWS = 1 << 15  # below this collective latency beats the split
+
+
+def _pick(table, size: int):
+    for threshold, value in table:
+        if threshold is None or size <= threshold:
+            return value
+    raise AssertionError("table has no catch-all row")
+
+
+def _kernel_params(kernel: Kernel) -> tuple[str, float]:
+    """(kind, sigma) for the Pallas wrappers; sigma must be concrete here
+    because the kernels bake 1/sigma into the compiled epilogue."""
+    try:
+        return kernel.name, float(kernel.sigma)
+    except (TypeError, jax.errors.ConcretizationTypeError) as e:
+        raise ValueError(
+            "PallasBackend needs a concrete kernel bandwidth; call it outside "
+            "jit (the core entry points already do)"
+        ) from e
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Abstract kernel-operator backend (see module docstring)."""
+
+    name: ClassVar[str] = "abstract"
+    #: True if every method can be traced under jit with traced operands
+    #: (including the kernel bandwidth). Non-jit-safe backends are driven by
+    #: the host-level code paths instead.
+    jit_safe: ClassVar[bool] = False
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) of shape (n, m)."""
+        raise NotImplementedError
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        """q_i = K_Ji^T (K_JJ ∘ mask + diag(reg))^{-1} K_Ji for each candidate.
+
+        ``z`` (Mbuf, d) are padded center coordinates, ``mask`` (Mbuf,) their
+        validity, ``reg`` (Mbuf,) the regularized diagonal (lam n A on valid
+        slots, 1 on padding). Returns (Rbuf,) in fp32 precision.
+        """
+        raise NotImplementedError
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        """v -> K_nM^T (K_nM v) operator closure for CG."""
+        raise NotImplementedError
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y (M,) — the CG right-hand side."""
+        raise NotImplementedError
+
+    def knm_operators(self, kernel: Kernel, x: Array, z: Array,
+                      y: Array) -> tuple[KnmQuadraticOp, Array]:
+        """(quadratic op, K_nM^T y) together — lets backends that stage data
+        (sharding, device placement) pay the staging cost once."""
+        return self.knm_quadratic(kernel, x, z), self.knm_t(kernel, x, z, y)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference backend
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JnpBackend(Backend):
+    """Pure-jnp row-streaming backend (the numerical reference)."""
+
+    name: ClassVar[str] = "jnp"
+    jit_safe: ClassVar[bool] = True
+    block: int | None = None  # stream rows per block; None -> platform table
+
+    def _block(self) -> int:
+        return self.block or STREAM_BLOCK.get(jax.default_backend(), 2048)
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        return blocked_cross(kernel, x, z, block=self._block())
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        m = mask.astype(z.dtype)
+        kjj = kernel.cross(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+        g = kernel.cross(x_cand, z) * m[None, :]
+        chol = _chol_with_jitter(kjj)
+        v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
+        return jnp.sum(v * v, axis=0)
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        from .falkon import local_knm_quadratic
+
+        return local_knm_quadratic(kernel, x, z, block=self._block())
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        from .falkon import local_knm_t
+
+        return local_knm_t(kernel, x, z, y, block=self._block())
+
+
+# ---------------------------------------------------------------------------
+# Pallas fused-kernel backend
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(Backend):
+    """Fused Pallas TPU kernels; interpret-mode anywhere without a TPU."""
+
+    name: ClassVar[str] = "pallas"
+    interpret: bool | None = None  # None -> auto (off-TPU interprets)
+    bn: int | None = None  # tile overrides; None -> size tables above
+    bm: int | None = None
+
+    def _gram_tiles(self, n: int, m: int) -> tuple[int, int]:
+        bn, bm = _pick(PALLAS_GRAM_TILES, max(n, m))
+        return self.bn or bn, self.bm or bm
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        kind, sigma = _kernel_params(kernel)
+        bn, bm = self._gram_tiles(x.shape[0], z.shape[0])
+        return gram_ops.gram(x, z, sigma, kind=kind, bn=bn, bm=bm,
+                             interpret=self.interpret)
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        m = mask.astype(x_cand.dtype)
+        kjj = self.gram_block(kernel, z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+        chol = _chol_with_jitter(kjj)
+        # Explicit (M, M) inverse: the Pallas quadform consumes a dense W and
+        # fuses rowsum((G W) * G) in VMEM; M ~ d_eff so the inverse is cheap.
+        w = jax.scipy.linalg.cho_solve((chol, True), jnp.eye(kjj.shape[0], dtype=kjj.dtype))
+        g = self.gram_block(kernel, x_cand, z) * m[None, :]
+        bn, bm = self.bn or 0, self.bm or 0
+        tbn, tbm = _pick(PALLAS_QUADFORM_TILES, max(g.shape))
+        return quadform_ops.quadform(g, w, bn=bn or tbn, bm=bm or tbm,
+                                     interpret=self.interpret)
+
+    def _matvec_bn(self, n: int) -> int:
+        return self.bn or _pick(PALLAS_MATVEC_BN, n)
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        kind, sigma = _kernel_params(kernel)
+        return falkon_ops.make_knm_quadratic_op(
+            x, z, sigma, kind=kind, bn=self._matvec_bn(x.shape[0]),
+            interpret=self.interpret)
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        kind, sigma = _kernel_params(kernel)
+        return falkon_ops.knm_t(x, z, y, sigma, kind=kind,
+                                bn=self._matvec_bn(x.shape[0]),
+                                interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# shard_map data-parallel backend
+# ---------------------------------------------------------------------------
+
+
+def _sharded_gram_local(kernel: Kernel, xl: Array, z: Array) -> Array:
+    return kernel.cross(xl, z)
+
+
+def _sharded_quadform_local(kernel: Kernel, xc: Array, z: Array, m: Array,
+                            chol: Array) -> Array:
+    g = kernel.cross(xc, z) * m[None, :]
+    v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
+    return jnp.sum(v * v, axis=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_gram_fn(mesh: Mesh, axis: str):
+    """Jitted shard_map'd Gram, cached per (mesh, axis) so repeated calls at
+    the same shapes reuse one compile (Mesh is hashable)."""
+    return jax.jit(shard_map(
+        _sharded_gram_local, mesh=mesh,
+        in_specs=(P(), P(axis, None), P()), out_specs=P(axis, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_quadform_fn(mesh: Mesh, axis: str):
+    return jax.jit(shard_map(
+        _sharded_quadform_local, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(), P(), P()), out_specs=P(axis)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBackend(Backend):
+    """Data-parallel over the local device mesh: X rows sharded over ``axis``,
+    (M, M) factors replicated, partials psum-ed (DESIGN.md §2)."""
+
+    name: ClassVar[str] = "sharded"
+    axis: str = "data"
+    mesh: Mesh | None = None  # None -> 1-D mesh over all local devices
+
+    def _mesh(self) -> Mesh:
+        from .distributed import data_mesh
+
+        return self.mesh if self.mesh is not None else data_mesh(self.axis)
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        from .distributed import shard_rows
+
+        mesh = self._mesh()
+        xs = shard_rows(mesh, x, self.axis)
+        return _sharded_gram_fn(mesh, self.axis)(kernel, xs, z)[: x.shape[0]]
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        from .distributed import shard_rows
+
+        mesh = self._mesh()
+        m = mask.astype(x_cand.dtype)
+        kjj = kernel.cross(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+        chol = _chol_with_jitter(kjj)  # replicated: (Mbuf, Mbuf) <= d_eff^2
+        xs = shard_rows(mesh, x_cand, self.axis)
+        quad = _sharded_quadform_fn(mesh, self.axis)(kernel, xs, z, m, chol)
+        return quad[: x_cand.shape[0]]
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        from .distributed import dist_knm_quadratic, shard_rows
+
+        mesh = self._mesh()
+        xs = shard_rows(mesh, x, self.axis)
+        return dist_knm_quadratic(mesh, kernel, xs, z, x.shape[0], self.axis)
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        from .distributed import dist_knm_t, shard_rows
+
+        mesh = self._mesh()
+        return dist_knm_t(mesh, kernel, shard_rows(mesh, x, self.axis),
+                          shard_rows(mesh, y, self.axis), z, x.shape[0], self.axis)
+
+    def knm_operators(self, kernel: Kernel, x: Array, z: Array,
+                      y: Array) -> tuple[KnmQuadraticOp, Array]:
+        from .distributed import dist_knm_quadratic, dist_knm_t, shard_rows
+
+        mesh = self._mesh()
+        xs = shard_rows(mesh, x, self.axis)  # device_put once, reuse for both
+        ys = shard_rows(mesh, y, self.axis)
+        n = x.shape[0]
+        return (dist_knm_quadratic(mesh, kernel, xs, z, n, self.axis),
+                dist_knm_t(mesh, kernel, xs, ys, z, n, self.axis))
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+
+def default_backend(n: int | None = None) -> Backend:
+    """Platform + problem-size heuristic.
+
+    TPU -> fused Pallas kernels (compiled); multiple devices with enough rows
+    to amortize the collectives -> shard_map; otherwise the jnp streamer.
+    ``n`` is the dataset row count when the caller knows it.
+    """
+    platform = jax.default_backend()
+    if platform == "tpu" and (n is None or n >= _PALLAS_MIN_ROWS):
+        return PallasBackend()
+    if len(jax.devices()) > 1 and n is not None and n >= _SHARD_MIN_ROWS:
+        return ShardedBackend()
+    return JnpBackend()
+
+
+register_backend("jnp", JnpBackend)
+register_backend("pallas", PallasBackend)
+register_backend("sharded", ShardedBackend)

@@ -16,12 +16,11 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .gram import Kernel
+from .gram import BackendLike, Kernel, resolve_backend
 from .leverage import CenterSet, approx_rls
 
 Array = jax.Array
@@ -47,12 +46,14 @@ class BlessResult:
     def final(self) -> BlessLevel:
         return self.levels[-1]
 
-    def scores(self, kernel: Kernel, x_all: Array, lam: float | None = None) -> Array:
+    def scores(self, kernel: Kernel, x_all: Array, lam: float | None = None,
+               *, backend: BackendLike = None) -> Array:
         """Approximate leverage scores for every point at the final scale."""
         from .leverage import approx_rls_all
 
         lvl = self.final
-        return approx_rls_all(kernel, x_all, lvl.centers, jnp.asarray(lam or lvl.lam))
+        return approx_rls_all(kernel, x_all, lvl.centers, jnp.asarray(lam or lvl.lam),
+                              backend=backend)
 
 
 def theory_constants(t: float, q: float, n: int, h: int, delta: float = 0.1):
@@ -91,7 +92,7 @@ def bless(
     lam0: float | None = None,
     t: float = 1.0,
     m_cap: int | None = None,
-    score_fn: Callable | None = None,
+    backend: BackendLike = None,
 ) -> BlessResult:
     """Bottom-up Leverage Score Sampling (paper Alg. 1).
 
@@ -106,7 +107,9 @@ def bless(
       lam0: ladder start; defaults to the paper's kappa^2/min(t, 1).
       t: target multiplicative accuracy (only sets the default lam0).
       m_cap: optional hard cap on M_h (memory guard for benchmarks).
-      score_fn: override for the Eq. 3 scorer (used by the distributed path).
+      backend: kernel-operator backend for the Eq. 3 scorer — an instance,
+        a registry name ("jnp" | "pallas" | "sharded"), or None for the
+        platform heuristic (repro.core.backend.default_backend).
 
     Returns:
       BlessResult with one BlessLevel per rung — the whole regularization
@@ -116,7 +119,7 @@ def bless(
     kap2 = float(kernel.kappa_sq)
     lam0 = kap2 / min(t, 1.0) if lam0 is None else lam0
     lams = lam_ladder(lam, lam0, q)
-    score = score_fn or approx_rls
+    backend = resolve_backend(backend, n=n)
 
     centers = CenterSet.empty(1)
     levels: list[BlessLevel] = []
@@ -128,7 +131,8 @@ def bless(
         u_idx = jax.random.randint(k_u, (rbuf,), 0, n)
         u_mask = jnp.arange(rbuf) < r_h
         # -- line 6: Eq. 3 scores of candidates against (J_{h-1}, A_{h-1})
-        s = score(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam_h))
+        s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam_h),
+                       backend=backend)
         s = jnp.where(u_mask, s, 0.0)
         # -- line 7/8: sampling distribution and d_h
         tot = jnp.maximum(jnp.sum(s), 1e-30)
@@ -178,6 +182,7 @@ def bless_r(
     lam0: float | None = None,
     t: float = 1.0,
     m_cap: int | None = None,
+    backend: BackendLike = None,
 ) -> BlessResult:
     """Bottom-up Leverage Score Sampling without replacement (paper Alg. 2).
 
@@ -190,6 +195,7 @@ def bless_r(
     kap2 = float(kernel.kappa_sq)
     lam0 = kap2 / min(t, 1.0) if lam0 is None else lam0
     lams = lam_ladder(lam, lam0, q)
+    backend = resolve_backend(backend, n=n)
 
     centers = CenterSet.empty(1)
     levels: list[BlessLevel] = []
@@ -208,7 +214,8 @@ def bless_r(
         u_idx = jnp.pad(order, (0, max(0, rbuf - n)))[:rbuf].astype(jnp.int32)
         u_mask = jnp.arange(rbuf) < r_h
         # -- line 10: scores at the *previous* scale lam_{h-1}
-        s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam_prev))
+        s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam_prev),
+                       backend=backend)
         p = jnp.minimum(q2 * s, 1.0)
         # -- line 11: accept j with prob p_j / beta  (clipped: see App. C)
         acc = (jax.random.uniform(k_a, (rbuf,)) < jnp.minimum(p / beta, 1.0)) & u_mask

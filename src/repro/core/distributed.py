@@ -7,9 +7,10 @@ phases are jax-native SPMD (DESIGN.md §2):
     ``data`` mesh axis; each device runs the fused local Gram-matvec and the
     (M,) partials are ``psum``-ed — the exact collective schedule of a DP
     gradient all-reduce, so it inherits XLA's overlap machinery.
-  * BLESS candidate scoring: candidates are row-sharded, the (Mbuf, Mbuf)
-    Cholesky factor is replicated (it is <= d_eff^2 by the paper's own space
-    bound), scores gathered back replicated for the (tiny) sampling step.
+  * BLESS candidate scoring lives behind the backend seam:
+    ``repro.core.backend.ShardedBackend.masked_quadform`` (candidates
+    row-sharded, the (Mbuf, Mbuf) Cholesky factor replicated — it is
+    <= d_eff^2 by the paper's own space bound).
 
 Everything here works on a 1-device mesh too, which is how the unsharded
 tests exercise it; tests/test_distributed.py re-runs on 8 forced host
@@ -17,7 +18,6 @@ devices in a subprocess.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -25,9 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .falkon import FalkonModel, cg, make_preconditioner
+from .falkon import FalkonModel
 from .gram import Kernel
-from .leverage import CenterSet, _chol_with_jitter
 
 Array = jax.Array
 
@@ -78,46 +77,17 @@ def dist_knm_t(mesh: Mesh, kernel: Kernel, x_sharded: Array, y_sharded: Array, z
                              out_specs=P()))(x_sharded, y_sharded)
 
 
-def dist_score_candidates(mesh: Mesh, kernel: Kernel, x_cand_sharded: Array,
-                          cand_mask_sharded: Array, x_all_n: int, centers: CenterSet,
-                          lam: float, x_all_gather: Callable[[Array], Array],
-                          axis: str = "data") -> Array:
-    """Eq. 3 scores with candidates row-sharded, centers replicated."""
-    z = x_all_gather(centers.idx)  # (Mbuf, d) replicated center coordinates
-    m = centers.mask.astype(z.dtype)
-    kjj = kernel.cross(z, z) * (m[:, None] * m[None, :])
-    reg = jnp.where(centers.mask, lam * x_all_n * centers.weight, 1.0)
-    chol = _chol_with_jitter(kjj + jnp.diag(reg))
-
-    def local(xc: Array, mc: Array) -> Array:
-        kdiag = kernel.diag(xc)
-        g = kernel.cross(xc, z) * m[None, :]
-        v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
-        s = (kdiag - jnp.sum(v * v, axis=0)) / (lam * x_all_n)
-        return jnp.where(mc & (centers.count > 0), jnp.clip(s, 1e-12, 1.0),
-                         jnp.where(mc, jnp.clip(kdiag / (lam * x_all_n), 1e-12, 1.0), 1e-12))
-
-    return jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis, None), P(axis)),
-                             out_specs=P(axis)))(x_cand_sharded, cand_mask_sharded)
-
-
 def falkon_fit_distributed(mesh: Mesh, kernel: Kernel, x: Array, y: Array, centers: Array,
                            lam: float, *, a_diag: Array | None = None, iters: int = 20,
                            axis: str = "data") -> FalkonModel:
-    """Data-parallel FALKON: X/y sharded over ``axis``, (M,*) state replicated."""
-    n = x.shape[0]
-    m = centers.shape[0]
-    a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
-    xs = shard_rows(mesh, x, axis)
-    ys = shard_rows(mesh, y, axis)
-    prec = make_preconditioner(kernel, centers, a_diag, lam, n)
-    kmm = kernel.cross(centers, centers)
-    quad = dist_knm_quadratic(mesh, kernel, xs, centers, n, axis)
-    kty = dist_knm_t(mesh, kernel, xs, ys, centers, n, axis)
+    """Data-parallel FALKON: X/y sharded over ``axis``, (M,*) state replicated.
 
-    def matvec(v: Array) -> Array:
-        u = prec.apply(v)
-        return prec.apply_t(quad(u) + lam * n * (kmm @ u))
+    Thin wrapper: ``falkon_fit`` with a ``ShardedBackend`` pinned to ``mesh``
+    — the backend stages X/y once (shard_rows) and serves both CG
+    contractions through the same dist_* collectives defined above.
+    """
+    from .backend import ShardedBackend
+    from .falkon import falkon_fit
 
-    beta = cg(matvec, prec.apply_t(kty), iters)
-    return FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel)
+    return falkon_fit(kernel, x, y, centers, lam, a_diag=a_diag, iters=iters,
+                      backend=ShardedBackend(axis=axis, mesh=mesh))

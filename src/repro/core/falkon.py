@@ -15,9 +15,10 @@ with the generalized preconditioner of Def. 2 / Eq. (15):
 
 so that B B^T = (n/M K_MM A^{-1} K_MM + lam n K_MM)^{-1}.
 
-The CG matvec never materializes K_nM: ``knm_op`` is an abstract operator —
-the local pure-jnp streamer here, the Pallas fused kernel
-(repro.kernels.falkon_matvec) on TPU, or the shard_map data-parallel one in
+The CG matvec never materializes K_nM: the K_nM^T K_nM v / K_nM^T y
+contractions come from the kernel-operator ``Backend`` seam
+(``repro.core.backend``) — the local pure-jnp streamer, the Pallas fused
+kernel (repro.kernels.falkon_matvec), or the shard_map data-parallel one in
 core/distributed.py. All three share this file's CG loop.
 """
 from __future__ import annotations
@@ -29,7 +30,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .gram import Kernel
+from .gram import BackendLike, Kernel, resolve_backend
 from .leverage import CenterSet, _chol_with_jitter
 
 Array = jax.Array
@@ -202,22 +203,22 @@ def falkon_fit(
     *,
     a_diag: Array | None = None,
     iters: int = 20,
-    knm_quadratic: Callable[[Array], Array] | None = None,
-    knm_t_y: Array | None = None,
+    backend: BackendLike = None,
     callback: Callable[[int, FalkonModel], None] | None = None,
 ) -> FalkonModel:
     """Fit FALKON (uniform A=I) or FALKON-BLESS (A from Alg. 1/2).
 
-    ``knm_quadratic`` / ``knm_t_y`` let callers swap in the Pallas fused
-    operator or the shard_map distributed one; defaults stream locally.
+    ``backend`` selects the K_nM operator implementation — an instance, a
+    registry name ("jnp" | "pallas" | "sharded"), or None for the platform
+    heuristic (repro.core.backend.default_backend).
     """
     n = x.shape[0]
     m = centers.shape[0]
+    backend = resolve_backend(backend, n=n)
     a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
-    kmm = kernel.cross(centers, centers)
-    quad = knm_quadratic or local_knm_quadratic(kernel, x, centers)
-    kty = local_knm_t(kernel, x, centers, y) if knm_t_y is None else knm_t_y
+    kmm = backend.gram_block(kernel, centers, centers)
+    quad, kty = backend.knm_operators(kernel, x, centers, y)
 
     def matvec(v: Array) -> Array:
         u = prec.apply(v)
@@ -235,15 +236,17 @@ def falkon_fit(
 
 def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: float,
                      lam_falkon: float, *, iters: int = 20, q2: float = 3.0,
-                     m_cap: int | None = None, callback=None) -> FalkonModel:
+                     m_cap: int | None = None, backend: BackendLike = None,
+                     callback=None) -> FalkonModel:
     """FALKON-BLESS end-to-end: BLESS centers/weights at lam_bless, CG at
     lam_falkon (the paper's lam_bless >> lam_falkon trick, Sec. 4)."""
     from .bless import bless
 
-    res = bless(key, x, kernel, lam_bless, q2=q2, m_cap=m_cap)
+    backend = resolve_backend(backend, n=x.shape[0])
+    res = bless(key, x, kernel, lam_bless, q2=q2, m_cap=m_cap, backend=backend)
     lvl = res.final
     m = lvl.m_h
     idx = lvl.centers.idx[:m]
     a = lvl.centers.weight[:m]
     return falkon_fit(kernel, x, y, x[idx], lam_falkon, a_diag=a, iters=iters,
-                      callback=callback)
+                      backend=backend, callback=callback)

@@ -1,21 +1,30 @@
-"""Kernel (Gram) computations.
+"""Kernel (Gram) computations and the kernel-operator backend registry.
 
 The paper works with a bounded PSD kernel ``K(x, x') <= kappa^2`` (Eq. 17).
 ``Kernel`` is a tiny pytree so jitted core functions retrace only when the
 kernel *family* changes, not when its bandwidth does.
 
-The blockwise entry points here are the pure-jnp reference path; on real TPU
-hardware the same contractions are served by the Pallas kernels in
-``repro.kernels.gram`` / ``repro.kernels.falkon_matvec`` (selected via
-``use_pallas`` flags higher up the stack).
+The blockwise entry points here are the pure-jnp reference path; the same
+contractions are served by the Pallas kernels (``repro.kernels.gram`` /
+``repro.kernels.falkon_matvec``) and the shard_map data-parallel path
+(``repro.core.distributed``) through the ``Backend`` implementations in
+``repro.core.backend``. This module owns only the *registry* so the low
+levels (leverage, bless, falkon) can resolve a backend by name without
+importing the backend module at import time (it imports all of them).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import TYPE_CHECKING, Callable, Union
 
 import jax
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # pragma: no cover — type-only, avoids the import cycle
+    from .backend import Backend
+
+BackendLike = Union["Backend", str, None]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -79,6 +88,56 @@ def sq_dists(x: jax.Array, z: jax.Array) -> jax.Array:
 
 def make_kernel(name: str = "gaussian", sigma: float = 1.0, kappa_sq: float = 1.0) -> Kernel:
     return Kernel(name=name, sigma=sigma, kappa_sq=kappa_sq)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+#
+# ``repro.core.backend`` registers its implementations here on import; the
+# callers (leverage / bless / falkon / benchmarks) resolve by name or pass an
+# instance through. Keeping the dict in this leaf module breaks the cycle
+# backend.py -> {leverage, falkon, distributed} -> gram.
+# ---------------------------------------------------------------------------
+
+_BACKEND_REGISTRY: dict[str, Callable[[], "Backend"]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], "Backend"]) -> None:
+    """Register a zero-arg factory for ``resolve_backend(name)``."""
+    _BACKEND_REGISTRY[name] = factory
+
+
+def backend_names() -> list[str]:
+    _ensure_backends_loaded()
+    return sorted(_BACKEND_REGISTRY)
+
+
+def resolve_backend(spec: BackendLike = None, *, n: int | None = None) -> "Backend":
+    """Resolve a backend spec: instance (passthrough), name, or None (auto).
+
+    ``None`` picks ``backend.default_backend(n)`` — the platform/size
+    heuristic — so every core entry point gets hardware-appropriate
+    contractions without callers naming one. ``n`` is the dataset row count
+    when the caller knows it.
+    """
+    if spec is None:
+        _ensure_backends_loaded()
+        from .backend import default_backend
+
+        return default_backend(n)
+    if isinstance(spec, str):
+        _ensure_backends_loaded()
+        try:
+            return _BACKEND_REGISTRY[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {spec!r}; registered: {sorted(_BACKEND_REGISTRY)}"
+            ) from None
+    return spec
+
+
+def _ensure_backends_loaded() -> None:
+    from . import backend  # noqa: F401 — import side effect: registration
 
 
 @partial(jax.jit, static_argnames=("block",))

@@ -3,6 +3,12 @@
 All approximate-score paths run on *padded* center buffers with validity
 masks so every ladder level of BLESS hits a bounded set of jit shapes
 (pow2 buckets), which is what makes the host-orchestrated ladder cheap.
+
+The Eq. 3 inner contraction (the K_Ji quadratic form) goes through the
+kernel-operator ``Backend`` seam (``repro.core.backend``): jit-safe backends
+(the jnp streamer) run inside one jitted scorer; the Pallas / shard_map
+backends are driven by an equivalent host-level path because their tile and
+collective schedules need concrete kernel parameters.
 """
 from __future__ import annotations
 
@@ -12,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .gram import Kernel
+from .gram import BackendLike, Kernel, resolve_backend
 
 _SCORE_FLOOR = 1e-12  # keep sampling probabilities strictly positive
 
@@ -59,7 +65,6 @@ def effective_dim(kernel: Kernel, x: jax.Array, lam: float) -> jax.Array:
     return jnp.sum(exact_rls(kernel, x, lam))
 
 
-@jax.jit
 def approx_rls(
     kernel: Kernel,
     x_cand: jax.Array,
@@ -67,6 +72,8 @@ def approx_rls(
     x_all: jax.Array,
     centers: CenterSet,
     lam: jax.Array,
+    *,
+    backend: BackendLike = None,
 ) -> jax.Array:
     """Approximate leverage scores (Eq. 3) of candidates against (J, A).
 
@@ -77,6 +84,16 @@ def approx_rls(
     their Gram rows/cols and pinning the regularized diagonal to 1.
     Returns (Rbuf,) scores; entries at invalid candidates are _SCORE_FLOOR.
     """
+    backend = resolve_backend(backend, n=x_all.shape[0])
+    lam = jnp.asarray(lam)
+    if backend.jit_safe:
+        return _approx_rls_traced(kernel, x_cand, cand_mask, x_all, centers, lam, backend)
+    return _approx_rls_host(backend, kernel, x_cand, cand_mask, x_all, centers, lam)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _approx_rls_traced(kernel, x_cand, cand_mask, x_all, centers, lam, backend):
+    """One jitted Eq. 3 scorer for jit-safe backends (bounded retrace set)."""
     n = x_all.shape[0]
     z = x_all[centers.idx]  # (Mbuf, d)
     kdiag = kernel.diag(x_cand)
@@ -85,14 +102,8 @@ def approx_rls(
         return kdiag / (lam * n)
 
     def with_centers(_):
-        m = centers.mask.astype(x_all.dtype)
-        kjj = kernel.cross(z, z) * (m[:, None] * m[None, :])
         reg = jnp.where(centers.mask, lam * n * centers.weight, 1.0)
-        kjj = kjj + jnp.diag(reg)
-        g = kernel.cross(x_cand, z) * m[None, :]  # (Rbuf, Mbuf)
-        chol = _chol_with_jitter(kjj)
-        v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)  # (Mbuf, Rbuf)
-        quad = jnp.sum(v * v, axis=0)
+        quad = backend.masked_quadform(kernel, x_cand, z, centers.mask, reg)
         return (kdiag - quad) / (lam * n)
 
     scores = jax.lax.cond(centers.count > 0, with_centers, no_centers, None)
@@ -100,7 +111,22 @@ def approx_rls(
     return jnp.where(cand_mask, scores, _SCORE_FLOOR)
 
 
-@partial(jax.jit, static_argnames=("block",))
+def _approx_rls_host(backend, kernel, x_cand, cand_mask, x_all, centers, lam):
+    """Host-driven Eq. 3 for backends whose dispatch needs concrete values
+    (Pallas tile params, shard_map staging). Same math as the traced path."""
+    n = x_all.shape[0]
+    kdiag = kernel.diag(x_cand)
+    if int(centers.count) > 0:
+        z = x_all[centers.idx]
+        reg = jnp.where(centers.mask, lam * n * centers.weight, 1.0)
+        quad = backend.masked_quadform(kernel, x_cand, z, centers.mask, reg)
+        scores = (kdiag - quad) / (lam * n)
+    else:
+        scores = kdiag / (lam * n)
+    scores = jnp.clip(scores, _SCORE_FLOOR, 1.0)
+    return jnp.where(cand_mask, scores, _SCORE_FLOOR)
+
+
 def approx_rls_all(
     kernel: Kernel,
     x_all: jax.Array,
@@ -108,8 +134,25 @@ def approx_rls_all(
     lam: jax.Array,
     *,
     block: int = 4096,
+    backend: BackendLike = None,
 ) -> jax.Array:
     """Eq. 3 scores for every i in [n], blocked over rows (used by Fig. 1)."""
+    backend = resolve_backend(backend, n=x_all.shape[0])
+    lam = jnp.asarray(lam)
+    if backend.jit_safe:
+        return _approx_rls_all_traced(kernel, x_all, centers, lam,
+                                      block=block, backend=backend)
+    n = x_all.shape[0]
+    out = []
+    for i in range(0, n, block):
+        xb = x_all[i:i + block]
+        mb = jnp.ones((xb.shape[0],), bool)
+        out.append(_approx_rls_host(backend, kernel, xb, mb, x_all, centers, lam))
+    return jnp.concatenate(out) if len(out) > 1 else out[0]
+
+
+@partial(jax.jit, static_argnames=("block", "backend"))
+def _approx_rls_all_traced(kernel, x_all, centers, lam, *, block, backend):
     n = x_all.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x_all, ((0, pad), (0, 0)))
@@ -117,7 +160,7 @@ def approx_rls_all(
 
     def body(args):
         xb, mb = args
-        return approx_rls(kernel, xb, mb, x_all, centers, lam)
+        return _approx_rls_traced(kernel, xb, mb, x_all, centers, lam, backend)
 
     out = jax.lax.map(body, (xp.reshape(-1, block, x_all.shape[1]), maskp.reshape(-1, block)))
     return out.reshape(-1)[:n]

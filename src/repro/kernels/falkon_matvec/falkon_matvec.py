@@ -67,3 +67,56 @@ def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: fl
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         interpret=interpret,
     )(x, z, v)
+
+
+def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
+                  bn: int, n_valid: int):
+    """r += y_tile^T k(X_tile, Z) — the CG right-hand side K_nM^T y, fused.
+
+    Same tile schedule as the quadratic matvec: the Gram tile never leaves
+    VMEM, so building b costs one streaming pass over X instead of a
+    materialized (n, M) Gram plus a GEMV.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    z = z_ref[...].astype(jnp.float32)  # (M, d)
+    prod = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (bn, M)
+    if kind == "linear":
+        g = prod
+    else:
+        d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
+                         - 2.0 * prod, 0.0)
+        g = jnp.exp(-d2 * inv_scale) if kind == "gaussian" else jnp.exp(
+            -jnp.sqrt(d2 + 1e-30) * inv_scale)
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    g = jnp.where(rows < n_valid, g, 0.0)
+    o_ref[...] += y_ref[...].astype(jnp.float32) @ g  # (bn,) @ (bn, M)
+
+
+@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret", "inv_scale"))
+def knm_t_pallas(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
+                 *, kind: str = "gaussian", bn: int = 512, n_valid: int,
+                 interpret: bool = True) -> jax.Array:
+    """K_nM^T y for pre-padded x (n, d), z (M, d), y (n,)."""
+    n, d = x.shape
+    m = z.shape[0]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    return pl.pallas_call(
+        partial(_knm_t_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
+                n_valid=n_valid),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(x, z, y)

@@ -1,8 +1,8 @@
-"""Public wrapper for the fused K_nM^T K_nM v operator.
+"""Public wrappers for the fused FALKON CG contractions.
 
-``make_knm_quadratic_op`` returns a closure with the ``knm_quadratic``
-signature expected by ``repro.core.falkon.falkon_fit`` — drop-in for the
-pure-jnp streamer on TPU.
+``falkon_matvec`` (K_nM^T K_nM v) and ``knm_t`` (K_nM^T y) are the two
+operators ``repro.core.backend.PallasBackend`` serves to
+``repro.core.falkon.falkon_fit``; both pad internally to tile boundaries.
 """
 from __future__ import annotations
 
@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from ..common import default_interpret, pad_dim, round_up
-from .falkon_matvec import falkon_matvec_pallas
-from .ref import falkon_matvec_ref
+from .falkon_matvec import falkon_matvec_pallas, knm_t_pallas
+from .ref import falkon_matvec_ref, knm_t_ref
 
 
 def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,
@@ -42,4 +42,22 @@ def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
     return op
 
 
+def knm_t(x: jax.Array, z: jax.Array, y: jax.Array, sigma: float = 1.0, *,
+          kind: str = "gaussian", bn: int = 512,
+          interpret: bool | None = None) -> jax.Array:
+    """K_nM^T y -> (M,) fp32. Arbitrary shapes, padded internally."""
+    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
+    n, d = x.shape
+    m = z.shape[0]
+    interpret = default_interpret() if interpret is None else interpret
+    dp = round_up(d, 128)
+    xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
+    zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
+    yp = pad_dim(y, 0, round_up(n, bn))
+    out = knm_t_pallas(xp, zp, yp, float(inv_scale), kind=kind, bn=bn,
+                       n_valid=n, interpret=interpret)
+    return out[:m]
+
+
 falkon_matvec_reference = falkon_matvec_ref
+knm_t_reference = knm_t_ref

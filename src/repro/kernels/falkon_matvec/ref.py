@@ -9,3 +9,9 @@ def falkon_matvec_ref(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float
                       *, kind: str = "gaussian") -> jax.Array:
     g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
     return g.T @ (g @ v.astype(jnp.float32))
+
+
+def knm_t_ref(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
+              *, kind: str = "gaussian") -> jax.Array:
+    g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
+    return g.T @ y.astype(jnp.float32)

@@ -75,7 +75,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
               f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
               f"temps={mem.temp_size_in_bytes/2**30:.2f}GiB "
               f"out={mem.output_size_in_bytes/2**30:.2f}GiB")
-        cost = compiled.cost_analysis()
+        cost = cost_model.xla_cost_analysis(compiled)
         print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
               f"bytes={cost.get('bytes accessed', 0):.3e} "
               "(loop bodies counted once by XLA - see cost_model)")

@@ -26,8 +26,17 @@ from jax.experimental.shard_map import shard_map
 Array = jax.Array
 
 
+def _axis_size(axis: str) -> int:
+    """jax.lax.axis_size where it exists; the axis-env lookup on older jax
+    (where ``axis_frame`` returns the size directly)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    size = jax.core.axis_frame(axis)
+    return size if isinstance(size, int) else size.size
+
+
 def _shift_right(x: Array, axis: str) -> Array:
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     return jax.lax.ppermute(x, axis, [(i, (i + 1) % n) for i in range(n)])
 
 

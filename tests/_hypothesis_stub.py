@@ -1,0 +1,86 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The container this repo develops in has no network access, so ``pip install
+hypothesis`` isn't always possible; CI installs the real library (see
+pyproject's ``test`` extra) and uses it. This stub implements exactly the
+subset the test suite uses — ``@settings(max_examples=, deadline=)``,
+``@given(**kw)``, ``strategies.{floats,integers,sampled_from}`` — drawing a
+fixed, seeded example sequence per test: both range endpoints first, then
+uniform draws. Registered into ``sys.modules`` by ``conftest.py`` only when
+the real package is missing.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_SEED = 0xB1E55
+
+
+class _Strategy:
+    def __init__(self, draw, endpoints=()):
+        self.draw = draw
+        self.endpoints = tuple(endpoints)
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     endpoints=(min_value, max_value))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     endpoints=(min_value, max_value))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: rng.choice(seq), endpoints=seq[:1])
+
+
+def given(**strategies_kw):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 10)
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn = {}
+                for name, strat in strategies_kw.items():
+                    if i < len(strat.endpoints):
+                        drawn[name] = strat.endpoints[i]
+                    else:
+                        drawn[name] = strat.draw(rng)
+                fn(*args, **drawn, **kwargs)
+
+        # NOTE: deliberately no functools.wraps — pytest must see the
+        # (*args, **kwargs) signature, not the strategy parameters (it would
+        # try to resolve them as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register the stub as the ``hypothesis`` package."""
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for f in (floats, integers, sampled_from):
+        setattr(st_mod, f.__name__, f)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

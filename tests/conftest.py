@@ -4,6 +4,13 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # offline container: deterministic stub (CI has the real one)
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 
 @pytest.fixture(scope="session")
 def clustered_data():

@@ -1,0 +1,124 @@
+"""Kernel-operator backend layer: the three hot contractions agree across
+jnp / Pallas(interpret) / shard_map to fp32 tolerance, end-to-end BLESS and
+FALKON runs included, plus registry/heuristic plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (JnpBackend, PallasBackend, ShardedBackend, backend_names,
+                        bless, default_backend, falkon_fit, make_kernel,
+                        resolve_backend)
+from repro.core.leverage import approx_rls_all
+
+BACKENDS = ["jnp", "pallas", "sharded"]
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+def _problem(n=400, m=64, d=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    y = jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1] ** 2
+    z = x[:m]
+    return x, y, z
+
+
+# -- registry / heuristic ----------------------------------------------------
+
+
+def test_registry_names_and_resolution():
+    assert backend_names() == ["jnp", "pallas", "sharded"]
+    assert isinstance(resolve_backend("jnp"), JnpBackend)
+    assert isinstance(resolve_backend("pallas"), PallasBackend)
+    assert isinstance(resolve_backend("sharded"), ShardedBackend)
+    inst = PallasBackend(interpret=True)
+    assert resolve_backend(inst) is inst
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("cuda")
+
+
+def test_default_backend_heuristic_off_tpu():
+    # the suite runs on 1 CPU device: heuristic must land on the reference
+    assert isinstance(default_backend(), JnpBackend)
+    assert isinstance(default_backend(10_000_000), JnpBackend)
+
+
+def test_backends_are_hashable_jit_keys():
+    assert hash(JnpBackend()) == hash(JnpBackend())
+    assert JnpBackend() == JnpBackend()
+    assert PallasBackend(bn=256) != PallasBackend()
+
+
+# -- contraction parity ------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("kind", ["gaussian", "laplacian", "linear"])
+def test_gram_block_parity(name, kind):
+    kern = make_kernel(kind, sigma=1.7, kappa_sq=10.0)
+    x, _, _ = _problem(n=300)
+    # z disjoint from x: at d2 == 0 the laplacian's sqrt amplifies fp
+    # association noise between compiled and eager paths beyond tolerance
+    z = jax.random.normal(jax.random.PRNGKey(9), (70, x.shape[1]))
+    out = resolve_backend(name).gram_block(kern, x, z)
+    np.testing.assert_allclose(out, kern.cross(x, z), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_masked_quadform_parity(name):
+    x, _, z = _problem(n=256, m=48)
+    mbuf = 64
+    mask = jnp.arange(mbuf) < 48
+    zbuf = jnp.where(mask[:, None], jnp.pad(z, ((0, mbuf - 48), (0, 0))), 0.0)
+    reg = jnp.where(mask, 1e-3 * x.shape[0], 1.0)
+    ref = JnpBackend().masked_quadform(KERN, x, zbuf, mask, reg)
+    out = resolve_backend(name).masked_quadform(KERN, x, zbuf, mask, reg)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_knm_operators_parity(name):
+    x, y, z = _problem()
+    v = jax.random.normal(jax.random.PRNGKey(3), (z.shape[0],))
+    g = KERN.cross(x, z)
+    quad, kty = resolve_backend(name).knm_operators(KERN, x, z, y)
+    np.testing.assert_allclose(quad(v), g.T @ (g @ v), rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(g.T @ (g @ v)).max()))
+    np.testing.assert_allclose(kty, g.T @ y, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(g.T @ y).max()))
+
+
+# -- end-to-end parity (the acceptance bar) ----------------------------------
+
+
+@pytest.mark.parametrize("name", ["pallas", "sharded"])
+def test_bless_center_sets_match_jnp(name):
+    """Identical PRNG path + fp32-close scores => identical center sets."""
+    x, _, _ = _problem(n=500)
+    ref = bless(jax.random.PRNGKey(0), x, KERN, 1e-3, backend="jnp")
+    res = bless(jax.random.PRNGKey(0), x, KERN, 1e-3, backend=name)
+    assert [lvl.m_h for lvl in res.levels] == [lvl.m_h for lvl in ref.levels]
+    assert bool(jnp.all(res.final.centers.idx == ref.final.centers.idx))
+    np.testing.assert_allclose(res.final.centers.weight, ref.final.centers.weight,
+                               rtol=1e-4, atol=1e-5)
+    s_ref = approx_rls_all(KERN, x, ref.final.centers, jnp.asarray(1e-3), backend="jnp")
+    s = approx_rls_all(KERN, x, ref.final.centers, jnp.asarray(1e-3), backend=name)
+    np.testing.assert_allclose(s, s_ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["pallas", "sharded"])
+def test_falkon_predictions_match_jnp(name):
+    x, y, z = _problem()
+    ref = falkon_fit(KERN, x, y, z, 1e-3, iters=25, backend="jnp")
+    fk = falkon_fit(KERN, x, y, z, 1e-3, iters=25, backend=name)
+    pr, pf = ref.predict(x), fk.predict(x)
+    assert float(jnp.max(jnp.abs(pr - pf))) < 1e-4, name
+
+
+def test_pallas_backend_runs_interpret_explicitly():
+    """CI path: interpret=True forced (not just the off-TPU default)."""
+    x, y, z = _problem(n=300, m=40)
+    fk = falkon_fit(KERN, x, y, z, 1e-3, iters=15,
+                    backend=PallasBackend(interpret=True))
+    ref = falkon_fit(KERN, x, y, z, 1e-3, iters=15, backend="jnp")
+    assert float(jnp.max(jnp.abs(fk.predict(x) - ref.predict(x)))) < 1e-4

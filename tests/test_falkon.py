@@ -79,13 +79,13 @@ def test_falkon_bless_end_to_end(clustered_data):
     assert float(jnp.mean((pred - y) ** 2)) < 0.05 * float(base)
 
 
-def test_falkon_with_pallas_operator_matches():
-    from repro.kernels.falkon_matvec.ops import make_knm_quadratic_op
+def test_falkon_with_pallas_backend_matches():
+    from repro.core import PallasBackend
 
     x, y, z = _problem(n=400, m=64)
     lam = 1e-3
-    op = make_knm_quadratic_op(x, z, 1.5, interpret=True, bn=256)
-    fk = falkon_fit(KERN, x, y, z, lam, iters=25, knm_quadratic=op)
-    ref = falkon_fit(KERN, x, y, z, lam, iters=25)
+    fk = falkon_fit(KERN, x, y, z, lam, iters=25,
+                    backend=PallasBackend(interpret=True, bn=256))
+    ref = falkon_fit(KERN, x, y, z, lam, iters=25, backend="jnp")
     assert float(jnp.linalg.norm(fk.alpha - ref.alpha)
                  / jnp.linalg.norm(ref.alpha)) < 1e-3

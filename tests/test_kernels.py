@@ -80,20 +80,32 @@ def test_flash_attention_dtypes(dtype):
 
 
 def test_falkon_matvec_plugs_into_cg():
-    """The fused kernel is a drop-in knm_quadratic for falkon_fit."""
-    from repro.core import falkon_fit, make_kernel, nystrom_krr
-    from repro.kernels.falkon_matvec.ops import make_knm_quadratic_op
+    """The fused kernels serve falkon_fit through the Pallas backend."""
+    from repro.core import PallasBackend, falkon_fit, make_kernel, nystrom_krr
 
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (400, 6))
     y = jnp.sin(x[:, 0])
     z = x[:80]
     kern = make_kernel("gaussian", sigma=1.5)
-    op = make_knm_quadratic_op(x, z, 1.5, interpret=True, bn=256)
-    fk = falkon_fit(kern, x, y, z, 1e-3, iters=25, knm_quadratic=op)
+    fk = falkon_fit(kern, x, y, z, 1e-3, iters=25,
+                    backend=PallasBackend(interpret=True, bn=256))
     ny = nystrom_krr(kern, x, y, z, 1e-3)
     pf, pn = fk.predict(x), ny.predict(x)
     assert float(jnp.linalg.norm(pf - pn) / jnp.linalg.norm(pn)) < 1e-3
+
+
+@pytest.mark.parametrize("n,m,d", [(512, 128, 64), (700, 130, 17)])
+def test_knm_t_kernel_shapes(n, m, d):
+    from repro.kernels.falkon_matvec.ops import knm_t
+    from repro.kernels.falkon_matvec.ref import knm_t_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    y = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    out = knm_t(x, z, y, 1.5, interpret=True, bn=256)
+    ref = knm_t_ref(x, z, y, 1.0 / (2 * 1.5**2))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * float(jnp.abs(ref).max()))
 
 
 @pytest.mark.parametrize("s,chunk,h,p,n", [(96, 32, 4, 8, 16), (80, 32, 2, 16, 8),

@@ -46,19 +46,19 @@ def test_lm_trains_checkpoints_and_serves():
     step = jax.jit(make_train_step(cfg, opt, loss_chunks=4))
     pipe = SyntheticLM(cfg.vocab_size, batch=8, seq=64, seed=0, noise=0.05)
     losses = []
-    for s in range(30):
+    for s in range(60):  # past the lr peak: rule accuracy ~86% (pred correct by ~45)
         state, m = step(state, pipe.batch_at(s))
         losses.append(float(m["loss"]))
     assert losses[-1] < 0.5 * losses[0], losses[::10]
 
     with tempfile.TemporaryDirectory() as d:
-        save_checkpoint(d, 30, state)
+        save_checkpoint(d, 60, state)
         _, restored = restore_checkpoint(d, state)
         for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
             assert bool(jnp.all(a == b))
         # restored state continues identically (determinism)
-        s1, m1 = step(state, pipe.batch_at(30))
-        s2, m2 = step(restored, pipe.batch_at(30))
+        s1, m1 = step(state, pipe.batch_at(60))
+        s2, m2 = step(restored, pipe.batch_at(60))
         assert float(m1["loss"]) == float(m2["loss"])
 
     # greedy decode predicts the learned rule
@@ -87,7 +87,7 @@ def test_train_step_sharded_runs_on_local_mesh():
     """The same pjit train step the dry-run lowers also *runs* on a real
     (1-device) mesh with full sharding machinery engaged."""
     from repro.launch.specs import input_specs
-    from repro.sharding.rules import MeshCtx, set_mesh_ctx
+    from repro.sharding.rules import MeshCtx, activate_mesh, set_mesh_ctx
 
     cfg = dataclasses.replace(smoke(get_config("gemma-2b")), attn_chunk=64)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -99,7 +99,7 @@ def test_train_step_sharded_runs_on_local_mesh():
         state = train_state_init(cfg, jax.random.PRNGKey(0))
         pipe = SyntheticLM(cfg.vocab_size, batch=4, seq=64, seed=0)
         step = jax.jit(make_train_step(cfg, OptConfig(), loss_chunks=4))
-        with jax.set_mesh(mesh):
+        with activate_mesh(mesh):
             state, m = step(state, pipe.batch_at(0))
         assert jnp.isfinite(m["loss"])
     finally:

@@ -10,12 +10,18 @@
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
 CPU-scale sizes; every timing is post-warmup (jit cache hot).
 
-``--backend {jnp,pallas,sharded}`` pins the kernel-operator backend for the
-BLESS/FALKON benches (default: the platform heuristic).
+Flags:
+  --backend {jnp,pallas,sharded}  pin the kernel-operator backend
+  --json PATH      also write the records as a JSON array (the perf
+                   trajectory artifact future perf PRs diff against)
+  --repeats N      time each measurement N times, report the median
+  --only A,B       run only benches whose registry name contains a substring
+  --smoke          tiny sizes (CI smoke job: fast, still end-to-end)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,16 +29,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (bless, bless_r, exact_rls, falkon_fit, make_kernel,
-                        recursive_rls, squeak, two_pass, uniform_centers)
+                        recursive_rls, squeak, uniform_centers)
 from repro.core.leverage import approx_rls_all
 
-_ROWS: list[str] = []
+_RECORDS: list[dict] = []
+_REPEATS = 1
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
-    row = f"{name},{us:.1f},{derived}"
-    _ROWS.append(row)
-    print(row, flush=True)
+    _RECORDS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _ready(out) -> None:
+    if hasattr(out, "final"):
+        jax.block_until_ready(out.final.centers.idx)
+    elif hasattr(out, "idx"):
+        jax.block_until_ready(out.idx)
+    elif hasattr(out, "alpha"):
+        jax.block_until_ready(out.alpha)
+    else:
+        jax.block_until_ready(out)
+
+
+def timed(fn):
+    """(last result, median us over --repeats runs), after one warmup call."""
+    _ready(fn())  # warmup: compile every shape this measurement touches
+    times = []
+    out = None
+    for _ in range(_REPEATS):
+        t0 = time.perf_counter()
+        out = fn()
+        _ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return out, float(np.median(times))
 
 
 def _data(n: int, d: int = 10, seed: int = 0, clusters: int = 12):
@@ -67,13 +97,6 @@ def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3, backend=None) -> None
     key = jax.random.PRNGKey(0)
     lamj = jnp.asarray(lam)
 
-    def timed(fn):
-        fn()  # warmup (jit)
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out.idx if hasattr(out, "idx") else out)
-        return out, (time.perf_counter() - t0) * 1e6
-
     res, us = timed(lambda: bless(key, x, kern, lam, q2=4.0, q1=4.0, backend=backend))
     m, q5, q95 = _racc_stats(res.scores(kern, x, backend=backend), ell)
     emit("fig1.bless", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
@@ -83,55 +106,51 @@ def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3, backend=None) -> None
     emit("fig1.bless_r", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
 
     mref = res.final.m_h
-    cs, us = timed(lambda: squeak(key, x, kern, lam, m_cap=mref))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    cs, us = timed(lambda: squeak(key, x, kern, lam, m_cap=mref, backend=backend))
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
     emit("fig1.squeak", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
 
-    cs, us = timed(lambda: recursive_rls(key, x, kern, lam, m_cap=mref))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    cs, us = timed(lambda: recursive_rls(key, x, kern, lam, m_cap=mref, backend=backend))
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
     emit("fig1.rrls", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
 
     cs, us = timed(lambda: uniform_centers(key, n, mref))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj), ell)
+    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
     emit("fig1.uniform", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={mref}")
 
 
-def bench_fig2_runtime_scaling(lam: float = 2e-3, backend=None) -> None:
+def bench_fig2_runtime_scaling(lam: float = 2e-3, backend=None,
+                               sizes=(1000, 2000, 4000, 8000)) -> None:
     kern = make_kernel("gaussian", sigma=2.0)
     key = jax.random.PRNGKey(0)
-    for n in (1000, 2000, 4000, 8000):
+    for n in sizes:
         x = _data(n)
         for name, fn in (
             ("bless", lambda: bless(key, x, kern, lam, q2=3.0, q1=3.0, backend=backend)),
-            ("squeak", lambda: squeak(key, x, kern, lam, m_cap=600)),
-            ("rrls", lambda: recursive_rls(key, x, kern, lam, m_cap=600)),
+            ("squeak", lambda: squeak(key, x, kern, lam, m_cap=600, backend=backend)),
+            ("rrls", lambda: recursive_rls(key, x, kern, lam, m_cap=600, backend=backend)),
         ):
-            fn()  # warmup compiles for this n
-            t0 = time.perf_counter()
-            out = fn()
-            jax.block_until_ready(out.final.centers.idx if hasattr(out, "final") else out.idx)
-            emit(f"fig2.{name}.n{n}", (time.perf_counter() - t0) * 1e6, f"n={n}")
+            _, us = timed(fn)
+            emit(f"fig2.{name}.n{n}", us, f"n={n}")
 
 
-def bench_table1_complexity(backend=None) -> None:
+def bench_table1_complexity(n: int = 2000, backend=None) -> None:
     """|J_H| tracks q2*d_eff(lam) across lam — the Table 1 / Thm 1(b) claim."""
-    n = 2000
     x = _data(n)
     kern = make_kernel("gaussian", sigma=2.0)
     key = jax.random.PRNGKey(0)
     q2 = 3.0
     for lam in (1e-2, 3e-3, 1e-3):
         deff = float(jnp.sum(exact_rls(kern, x, lam)))
-        t0 = time.perf_counter()
-        res = bless(key, x, kern, lam, q2=q2, q1=3.0, backend=backend)
-        us = (time.perf_counter() - t0) * 1e6
+        res, us = timed(lambda: bless(key, x, kern, lam, q2=q2, q1=3.0, backend=backend))
         emit(f"table1.lam{lam:g}", us,
              f"deff={deff:.1f};M={res.final.m_h};q2*deff={q2 * deff:.1f};H={len(res.levels)}")
 
 
-def bench_fig45_falkon(n: int = 3000, m_target: int = 250, backend=None) -> None:
+def bench_fig45_falkon(n: int = 3000, m_target: int = 250, n_test: int = 800,
+                       backend=None) -> None:
     """Error per CG iteration: BLESS centers+weights vs uniform centers."""
-    x, y, xte, yte = _classif(n, 800)
+    x, y, xte, yte = _classif(n, n_test)
     kern = make_kernel("gaussian", sigma=2.0)
     lam_falkon, lam_bless = 1e-5, 1e-3
 
@@ -142,42 +161,43 @@ def bench_fig45_falkon(n: int = 3000, m_target: int = 250, backend=None) -> None
     a = res.final.centers.weight[:mh]
 
     def err_curve(centers, a_diag, tag):
-        errs = []
+        def run():
+            errs = []
 
-        def cb(i, model):
-            pred = jnp.sign(model.predict(xte))
-            errs.append(float(jnp.mean(pred != yte)))
+            def cb(i, model):
+                pred = jnp.sign(model.predict(xte))
+                errs.append(float(jnp.mean(pred != yte)))
 
-        t0 = time.perf_counter()
-        falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20,
-                   backend=backend, callback=cb)
-        us = (time.perf_counter() - t0) * 1e6
+            falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20,
+                       backend=backend, callback=cb)
+            return errs
+
+        errs, us = timed(run)
         best5 = min(errs[:5])
         emit(f"fig45.{tag}", us, f"err@5={best5:.4f};err@20={errs[-1]:.4f};M={centers.shape[0]}")
-        return errs
 
     err_curve(x[idx], a, "falkon_bless")
     ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
     err_curve(x[ku], None, "falkon_uni")
 
 
-def bench_fig3_lambda_stability(n: int = 2000, backend=None) -> None:
-    x, y, xte, yte = _classif(n, 600)
+def bench_fig3_lambda_stability(n: int = 2000, m_cap: int = 250, n_test: int = 600,
+                                backend=None) -> None:
+    x, y, xte, yte = _classif(n, n_test)
     kern = make_kernel("gaussian", sigma=2.0)
-    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=250, backend=backend)
+    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=m_cap, backend=backend)
     mh = res.final.m_h
     zc, a = x[res.final.centers.idx[:mh]], res.final.centers.weight[:mh]
     ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
     for lam in (1e-3, 1e-5, 1e-7):
         for tag, (c, ad) in {"bless": (zc, a), "uni": (x[ku], None)}.items():
-            t0 = time.perf_counter()
-            model = falkon_fit(kern, x, y, c, lam, a_diag=ad, iters=5, backend=backend)
+            model, us = timed(lambda: falkon_fit(kern, x, y, c, lam, a_diag=ad,
+                                                 iters=5, backend=backend))
             err = float(jnp.mean(jnp.sign(model.predict(xte)) != yte))
-            emit(f"fig3.{tag}.lam{lam:g}", (time.perf_counter() - t0) * 1e6,
-                 f"cerr@5it={err:.4f}")
+            emit(f"fig3.{tag}.lam{lam:g}", us, f"cerr@5it={err:.4f}")
 
 
-def bench_lm_steps() -> None:
+def bench_lm_steps(backend=None) -> None:
     """Smoke-scale per-arch step timing (framework sanity, not paper)."""
     from repro.configs import get_config, list_archs, smoke
     from repro.data import TokenPipeline
@@ -210,19 +230,53 @@ def bench_lm_steps() -> None:
              f"loss={float(metrics['loss']):.3f}")
 
 
+# registry name -> (full-size call, smoke-size call)
+BENCHES = {
+    "fig1": (bench_fig1_raccuracy, lambda backend: bench_fig1_raccuracy(n=600, backend=backend)),
+    "fig2": (bench_fig2_runtime_scaling,
+             lambda backend: bench_fig2_runtime_scaling(backend=backend, sizes=(500, 1000))),
+    "table1": (bench_table1_complexity,
+               lambda backend: bench_table1_complexity(n=600, backend=backend)),
+    "fig45": (bench_fig45_falkon,
+              lambda backend: bench_fig45_falkon(n=800, m_target=120, n_test=200,
+                                                 backend=backend)),
+    "fig3": (bench_fig3_lambda_stability,
+             lambda backend: bench_fig3_lambda_stability(n=600, m_cap=120, n_test=200,
+                                                         backend=backend)),
+    "lm": (bench_lm_steps, bench_lm_steps),
+}
+
+
 def main() -> None:
+    global _REPEATS
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
                     default="auto", help="kernel-operator backend for BLESS/FALKON")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write records as a JSON array to PATH")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="timed runs per measurement; the median is reported")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of bench names to run "
+                         f"(registry: {','.join(BENCHES)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI smoke job)")
     args = ap.parse_args()
     backend = None if args.backend == "auto" else args.backend
+    _REPEATS = max(1, args.repeats)
+    wanted = [w for w in (args.only or "").split(",") if w]
+    for w in wanted:  # a typo'd filter must not silently bench nothing
+        if not any(w in name for name in BENCHES):
+            ap.error(f"--only token {w!r} matches no bench; registry: {','.join(BENCHES)}")
     print("name,us_per_call,derived")
-    bench_fig1_raccuracy(backend=backend)
-    bench_fig2_runtime_scaling(backend=backend)
-    bench_table1_complexity(backend=backend)
-    bench_fig45_falkon(backend=backend)
-    bench_fig3_lambda_stability(backend=backend)
-    bench_lm_steps()
+    for name, (full, smoke) in BENCHES.items():
+        if wanted and not any(w in name for w in wanted):
+            continue
+        (smoke if args.smoke else full)(backend=backend)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_RECORDS, f, indent=1)
+        print(f"# wrote {len(_RECORDS)} records -> {args.json}", flush=True)
 
 
 if __name__ == "__main__":

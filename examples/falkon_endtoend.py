@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
-from repro.core import bless, make_kernel
+from repro.core import bless, falkon_fit, make_kernel
 from repro.core.distributed import data_mesh, falkon_fit_distributed
 
 
@@ -41,7 +41,12 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--m-cap", type=int, default=1500)
     ap.add_argument("--ckpt", default="/tmp/falkon_ckpt")
+    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
+                    default="auto",
+                    help="kernel-operator backend (auto: BLESS by platform "
+                         "heuristic / REPRO_BACKEND env, FALKON data-parallel)")
     args = ap.parse_args()
+    backend = None if args.backend == "auto" else args.backend
 
     n_test = 8000
     xa, ya = susy_like(args.n + n_test)  # one rule; held-out split
@@ -50,19 +55,25 @@ def main() -> None:
 
     t0 = time.time()
     res = bless(jax.random.PRNGKey(0), x, kern, args.lam_bless, q1=3.0, q2=3.0,
-                m_cap=args.m_cap)
+                m_cap=args.m_cap, backend=backend)
     t_bless = time.time() - t0
     m = res.final.m_h
     print(f"BLESS: {len(res.levels)} levels, M = {m} centers in {t_bless:.1f}s "
           f"(n = {args.n}; candidate sets never exceeded "
           f"{max(l.r_h for l in res.levels)} points — the 1/lam bound)")
 
-    mesh = data_mesh()
-    print(f"FALKON: data-parallel CG over {mesh.devices.size} device(s)")
     t0 = time.time()
-    model = falkon_fit_distributed(
-        mesh, kern, x, y, x[res.final.centers.idx[:m]], args.lam_falkon,
-        a_diag=res.final.centers.weight[:m], iters=args.iters)
+    if backend is None or backend == "sharded":
+        mesh = data_mesh()
+        print(f"FALKON: data-parallel CG over {mesh.devices.size} device(s)")
+        model = falkon_fit_distributed(
+            mesh, kern, x, y, x[res.final.centers.idx[:m]], args.lam_falkon,
+            a_diag=res.final.centers.weight[:m], iters=args.iters)
+    else:
+        print(f"FALKON: CG on the {backend!r} backend")
+        model = falkon_fit(
+            kern, x, y, x[res.final.centers.idx[:m]], args.lam_falkon,
+            a_diag=res.final.centers.weight[:m], iters=args.iters, backend=backend)
     t_falkon = time.time() - t0
 
     pred_tr = jnp.sign(model.predict(x[:10000]))

@@ -1,6 +1,11 @@
 """Quickstart: BLESS leverage-score sampling + FALKON-BLESS in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Every entry point below picks its kernel-operator backend by platform
+heuristic; pin one without code edits via the env var, e.g.
+``REPRO_BACKEND=pallas python examples/quickstart.py`` (the richer examples
+also take an explicit ``--backend`` flag).
 """
 import jax
 import jax.numpy as jnp

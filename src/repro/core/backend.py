@@ -1,12 +1,14 @@
 """Kernel-operator backends — the single seam for every hot contraction.
 
-Three contractions dominate the paper's cost story (BLESS Alg. 1/2 levels,
-the Eq. 3 scorer, FALKON's CG in Sec. 3):
+Four contractions dominate the paper's cost story (BLESS Alg. 1/2 levels,
+the Eq. 3 scorer, FALKON's CG in Sec. 3, and serving-side predict):
 
-  * ``gram_block``      — a K(X, Z) block (every ladder level, K_MM, predict)
+  * ``gram_block``      — a K(X, Z) block (every ladder level, K_MM)
   * ``masked_quadform`` — Eq. 3's inner term  K_Ji^T (K_JJ + lam n A)^{-1} K_Ji
   * ``knm_quadratic`` / ``knm_t`` — the CG matvec K_nM^T K_nM v and its
     right-hand side K_nM^T y, never materializing K_nM
+  * ``knm_matvec``      — K(X, Z) v, the predict / Nystrom-KRR forward pass
+    (FalkonModel.predict, nystrom_krr, batched serving)
 
 Each ``Backend`` serves all of them:
 
@@ -22,12 +24,14 @@ Each ``Backend`` serves all of them:
 Backends are small frozen dataclasses: hashable (usable as static jit
 arguments) and comparable by configuration, so the jit cache keys correctly.
 Selection is by instance, by registry name ("jnp" | "pallas" | "sharded"),
-or ``None`` for the ``default_backend()`` platform + problem-size heuristic.
+or ``None`` for the ``default_backend()`` platform + problem-size heuristic
+(overridable without code edits via the ``REPRO_BACKEND`` env var).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable, ClassVar
 
 import jax
@@ -126,6 +130,10 @@ class Backend:
         (sharding, device placement) pay the staging cost once."""
         return self.knm_quadratic(kernel, x, z), self.knm_t(kernel, x, z, y)
 
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        """K(X, Z) v of shape (n,) — the predict / KRR forward contraction."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # jnp reference backend
@@ -165,6 +173,24 @@ class JnpBackend(Backend):
 
         return local_knm_t(kernel, x, z, y, block=self._block())
 
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        # jitted (serving hot path): one compiled call per (shapes, block)
+        return _jnp_knm_matvec(kernel, x, z, v, block=self._block())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _jnp_knm_matvec(kernel: Kernel, x: Array, z: Array, v: Array, *,
+                    block: int) -> Array:
+    """K(X, Z) v, streaming X in row blocks — the jnp predict contraction."""
+    n = x.shape[0]
+    if n <= block:
+        return kernel.cross(x, z) @ v
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    out = jax.lax.map(lambda xb: kernel.cross(xb, z) @ v,
+                      xp.reshape(-1, block, x.shape[1]))
+    return out.reshape(-1)[:n]
+
 
 # ---------------------------------------------------------------------------
 # Pallas fused-kernel backend
@@ -173,12 +199,21 @@ class JnpBackend(Backend):
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(Backend):
-    """Fused Pallas TPU kernels; interpret-mode anywhere without a TPU."""
+    """Fused Pallas TPU kernels; interpret-mode anywhere without a TPU.
+
+    ``bf16=True`` is the opt-in mixed-precision mode: every kernel's dominant
+    MXU product loads its operands as bf16 and accumulates fp32 (the norms,
+    exp epilogues, and second-stage contractions stay fp32). Roughly doubles
+    MXU throughput and halves the tile working set on TPU; expect ~1e-2
+    relative error on kernel values for unit-scale data (tolerances measured
+    in tests/test_backend.py, documented in DESIGN.md §2).
+    """
 
     name: ClassVar[str] = "pallas"
     interpret: bool | None = None  # None -> auto (off-TPU interprets)
     bn: int | None = None  # tile overrides; None -> size tables above
     bm: int | None = None
+    bf16: bool = False  # mixed-precision MXU tiles (fp32 accumulation)
 
     def _gram_tiles(self, n: int, m: int) -> tuple[int, int]:
         bn, bm = _pick(PALLAS_GRAM_TILES, max(n, m))
@@ -188,7 +223,7 @@ class PallasBackend(Backend):
         kind, sigma = _kernel_params(kernel)
         bn, bm = self._gram_tiles(x.shape[0], z.shape[0])
         return gram_ops.gram(x, z, sigma, kind=kind, bn=bn, bm=bm,
-                             interpret=self.interpret)
+                             interpret=self.interpret, bf16=self.bf16)
 
     def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
                         mask: Array, reg: Array) -> Array:
@@ -202,7 +237,7 @@ class PallasBackend(Backend):
         bn, bm = self.bn or 0, self.bm or 0
         tbn, tbm = _pick(PALLAS_QUADFORM_TILES, max(g.shape))
         return quadform_ops.quadform(g, w, bn=bn or tbn, bm=bm or tbm,
-                                     interpret=self.interpret)
+                                     interpret=self.interpret, bf16=self.bf16)
 
     def _matvec_bn(self, n: int) -> int:
         return self.bn or _pick(PALLAS_MATVEC_BN, n)
@@ -211,13 +246,19 @@ class PallasBackend(Backend):
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.make_knm_quadratic_op(
             x, z, sigma, kind=kind, bn=self._matvec_bn(x.shape[0]),
-            interpret=self.interpret)
+            interpret=self.interpret, bf16=self.bf16)
 
     def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.knm_t(x, z, y, sigma, kind=kind,
                                 bn=self._matvec_bn(x.shape[0]),
-                                interpret=self.interpret)
+                                interpret=self.interpret, bf16=self.bf16)
+
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        kind, sigma = _kernel_params(kernel)
+        return falkon_ops.knm_matvec(x, z, v, sigma, kind=kind,
+                                     bn=self._matvec_bn(x.shape[0]),
+                                     interpret=self.interpret, bf16=self.bf16)
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +351,13 @@ class ShardedBackend(Backend):
         return (dist_knm_quadratic(mesh, kernel, xs, z, n, self.axis),
                 dist_knm_t(mesh, kernel, xs, ys, z, n, self.axis))
 
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        from .distributed import dist_knm_matvec, shard_rows
+
+        mesh = self._mesh()
+        return dist_knm_matvec(mesh, kernel, shard_rows(mesh, x, self.axis),
+                               z, v, x.shape[0], self.axis)
+
 
 # ---------------------------------------------------------------------------
 # Selection
@@ -322,7 +370,25 @@ def default_backend(n: int | None = None) -> Backend:
     TPU -> fused Pallas kernels (compiled); multiple devices with enough rows
     to amortize the collectives -> shard_map; otherwise the jnp streamer.
     ``n`` is the dataset row count when the caller knows it.
+
+    The ``REPRO_BACKEND`` env var overrides the heuristic entirely — set it
+    to a registry name ("jnp" | "pallas" | "sharded") to pin a backend on
+    hardware runs without code edits ("auto"/"" fall through to the
+    heuristic). Calibration story: ``_PALLAS_MIN_ROWS`` and
+    ``_SHARD_MIN_ROWS`` above are educated CPU-container guesses — on real
+    TPU / multi-host hardware, sweep ``REPRO_BACKEND`` against
+    ``benchmarks/run.py --json`` at your production n and move the
+    thresholds to where the backends' timing curves cross.
     """
+    env = os.environ.get("REPRO_BACKEND", "").strip().lower()
+    if env and env != "auto":
+        try:
+            return _ENV_BACKENDS[env]()
+        except KeyError:
+            raise ValueError(
+                f"REPRO_BACKEND={env!r} is not a registered backend; "
+                f"expected one of {sorted(_ENV_BACKENDS)} or 'auto'"
+            ) from None
     platform = jax.default_backend()
     if platform == "tpu" and (n is None or n >= _PALLAS_MIN_ROWS):
         return PallasBackend()
@@ -330,6 +396,10 @@ def default_backend(n: int | None = None) -> Backend:
         return ShardedBackend()
     return JnpBackend()
 
+
+_ENV_BACKENDS: dict[str, Callable[[], Backend]] = {
+    "jnp": JnpBackend, "pallas": PallasBackend, "sharded": ShardedBackend,
+}
 
 register_backend("jnp", JnpBackend)
 register_backend("pallas", PallasBackend)

@@ -9,7 +9,10 @@ BLESS with a shared scoring backend (Eq. 3 via ``approx_rls``):
   * SQUEAK           — [8]  Calandriello, Lazaric & Valko
 
 Implementations follow the paper's unified notation (Sec. 2.2/2.3): each
-method is a different schedule of ``L_J(U, lam) -> J'``.
+method is a different schedule of ``L_J(U, lam) -> J'``. Every scoring round
+goes through the kernel-operator ``Backend`` seam (resolved once per call,
+then threaded through the rounds), so the baselines benchmark on the same
+hardware path as BLESS.
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .bless import _multinomial, _pow2
-from .gram import Kernel
+from .gram import BackendLike, Kernel, resolve_backend
 from .leverage import CenterSet, approx_rls, uniform_center_set
 
 Array = jax.Array
@@ -32,9 +35,10 @@ def uniform_centers(key: Array, n: int, m: int) -> CenterSet:
 
 
 def _resample(key: Array, x: Array, u_idx: Array, u_mask: Array, centers: CenterSet,
-              kernel: Kernel, lam: float, m_out: int, n: int) -> CenterSet:
+              kernel: Kernel, lam: float, m_out: int, n: int, backend) -> CenterSet:
     """One leverage-score sampling round: L_{centers}(U, lam) -> J' (Eq. 5)."""
-    s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam))
+    s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam),
+                   backend=backend)
     s = jnp.where(u_mask, s, 0.0)
     p = s / jnp.maximum(jnp.sum(s), 1e-30)
     r_h = int(jnp.sum(u_mask))
@@ -51,23 +55,27 @@ def _resample(key: Array, x: Array, u_idx: Array, u_mask: Array, centers: Center
 
 
 def two_pass(key: Array, x: Array, kernel: Kernel, lam: float, *,
-             m1: int | None = None, m2: int) -> CenterSet:
+             m1: int | None = None, m2: int,
+             backend: BackendLike = None) -> CenterSet:
     """Two-pass sampling [6]: uniform J1 (size ~1/lam), then L_{J1}([n], lam)."""
     n = x.shape[0]
+    backend = resolve_backend(backend, n=n)
     m1 = m1 or min(n, int(math.ceil(kernel.kappa_sq / lam)))
     k1, k2 = jax.random.split(key)
     j1 = uniform_centers(k1, n, m1)
     u_idx = jnp.arange(_pow2(n), dtype=jnp.int32) % n
     u_mask = jnp.arange(_pow2(n)) < n
-    return _resample(k2, x, u_idx, u_mask, j1, kernel, lam, m2, n)
+    return _resample(k2, x, u_idx, u_mask, j1, kernel, lam, m2, n, backend)
 
 
 def recursive_rls(key: Array, x: Array, kernel: Kernel, lam: float, *,
                   q2: float = 2.0, depth: int | None = None,
-                  m_cap: int | None = None) -> CenterSet:
+                  m_cap: int | None = None,
+                  backend: BackendLike = None) -> CenterSet:
     """RECURSIVE-RLS [9]: nested uniform U_1 c U_2 c ... c U_H = [n],
     |U_h| = n / 2^(H-h);  J_1 = U_1;  L_{J_h}(U_{h+1}, lam) -> J_{h+1}."""
     n = x.shape[0]
+    backend = resolve_backend(backend, n=n)
     depth = depth or max(1, int(math.log2(max(2, n * lam))))
     perm = jax.random.permutation(key, n).astype(jnp.int32)
     sizes = [max(8, n // 2**(depth - h)) for h in range(depth)] + [n]
@@ -78,21 +86,23 @@ def recursive_rls(key: Array, x: Array, kernel: Kernel, lam: float, *,
         u_idx = perm[jnp.arange(rbuf) % n][: rbuf]
         u_mask = jnp.arange(rbuf) < r
         # m_out ~ q2 * estimated d_eff from current scores
-        s = approx_rls(kernel, x[u_idx], u_mask, x, j, jnp.asarray(lam))
+        s = approx_rls(kernel, x[u_idx], u_mask, x, j, jnp.asarray(lam),
+                       backend=backend)
         d_est = float(n / r * jnp.sum(jnp.where(u_mask, s, 0.0)))
         m_out = max(8, int(math.ceil(q2 * d_est)))
         if m_cap is not None:
             m_out = min(m_out, m_cap)
-        j = _resample(kh, x, u_idx, u_mask, j, kernel, lam, m_out, n)
+        j = _resample(kh, x, u_idx, u_mask, j, kernel, lam, m_out, n, backend)
     return j
 
 
 def squeak(key: Array, x: Array, kernel: Kernel, lam: float, *,
            n_chunks: int | None = None, qbar: float = 2.0,
-           m_cap: int | None = None) -> CenterSet:
+           m_cap: int | None = None, backend: BackendLike = None) -> CenterSet:
     """SQUEAK [8]: stream [n] in H chunks; merge-and-rescore
     L_{J_h u U_{h+1}}(J_h u U_{h+1}, lam) with Bernoulli thinning."""
     n = x.shape[0]
+    backend = resolve_backend(backend, n=n)
     n_chunks = n_chunks or max(2, int(math.sqrt(max(4, n * lam))))
     perm = jax.random.permutation(key, n).astype(jnp.int32)
     chunk = n // n_chunks
@@ -111,7 +121,8 @@ def squeak(key: Array, x: Array, kernel: Kernel, lam: float, *,
             mask=jnp.arange(cbuf) < cand.shape[0],
             count=jnp.asarray(cand.shape[0], jnp.int32),
         )
-        s = approx_rls(kernel, x[cs.idx], cs.mask, x, cs, jnp.asarray(lam))
+        s = approx_rls(kernel, x[cs.idx], cs.mask, x, cs, jnp.asarray(lam),
+                       backend=backend)
         p = jnp.minimum(qbar * s, 1.0)
         keep = (jax.random.uniform(kh, (cbuf,)) < p) & cs.mask
         if m_cap is not None and int(jnp.sum(keep)) > m_cap:

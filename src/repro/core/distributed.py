@@ -18,6 +18,7 @@ devices in a subprocess.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -75,6 +76,27 @@ def dist_knm_t(mesh: Mesh, kernel: Kernel, x_sharded: Array, y_sharded: Array, z
 
     return jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis, None), P(axis)),
                              out_specs=P()))(x_sharded, y_sharded)
+
+
+def _knm_matvec_local(kernel: Kernel, xl: Array, z: Array, v: Array) -> Array:
+    return kernel.cross(xl, z) @ v
+
+
+@functools.lru_cache(maxsize=None)
+def _dist_knm_matvec_fn(mesh: Mesh, axis: str):
+    """Jitted shard_map'd predict contraction, cached per (mesh, axis) so the
+    serving hot path compiles once per wave shape, not once per call."""
+    return jax.jit(shard_map(
+        _knm_matvec_local, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(), P()), out_specs=P(axis)))
+
+
+def dist_knm_matvec(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array, v: Array,
+                    n_valid: int, axis: str = "data") -> Array:
+    """K_nM v with X row-sharded — the predict contraction. The output is
+    row-parallel (each device owns its rows), so no collective is needed;
+    padded rows produce values that are sliced off."""
+    return _dist_knm_matvec_fn(mesh, axis)(kernel, x_sharded, z, v)[:n_valid]
 
 
 def falkon_fit_distributed(mesh: Mesh, kernel: Kernel, x: Array, y: Array, centers: Array,

@@ -19,7 +19,19 @@ The CG matvec never materializes K_nM: the K_nM^T K_nM v / K_nM^T y
 contractions come from the kernel-operator ``Backend`` seam
 (``repro.core.backend``) — the local pure-jnp streamer, the Pallas fused
 kernel (repro.kernels.falkon_matvec), or the shard_map data-parallel one in
-core/distributed.py. All three share this file's CG loop.
+core/distributed.py. All three share this file's CG loop, and
+``FalkonModel.predict`` serves K_nM alpha through the same seam.
+
+Fused whole-fit path (DESIGN.md §2.4): for jit-safe backends with no
+per-iteration callback, ``falkon_fit`` compiles preconditioner + CG + alpha
+recovery into ONE ``jax.jit`` call — repeated fits (benchmark sweeps,
+serving-side refits) pay a single dispatch instead of ~iters host round
+trips. The jit cache is shape-bucketed: X/y rows are padded up to a multiple
+of the backend's stream block and masked inside the trace, so every n in a
+bucket shares one executable. Cache key (static): row bucket, (M, d), iters,
+backend instance, kernel family. Traced (never retraces): lam, n, X, y,
+centers, a_diag, kernel bandwidth. The padded y buffer is donated (it is
+always freshly allocated here); X is not (callers reuse it across fits).
 """
 from __future__ import annotations
 
@@ -173,6 +185,73 @@ def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
 
 
 # ---------------------------------------------------------------------------
+# Fused whole-fit path (see module docstring / DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+
+#: times _fused_falkon_solve was traced (i.e. compiled for a new shape
+#: bucket). Tests assert a second same-bucket fit does NOT bump this — the
+#: whole solve is then a single cached compiled call with zero host-side CG
+#: dispatches.
+_FUSED_FIT_TRACES = 0
+
+
+def _fit_block(backend) -> int:
+    """Stream-block (and row-bucket granularity) for a jit-safe backend."""
+    get = getattr(backend, "_block", None)
+    return get() if get is not None else 4096
+
+
+def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
+                    row_mask: Array, block: int):
+    """(quadratic op, K_nM^T y) over bucket-padded rows with a traced
+    validity mask — same math as local_knm_quadratic / local_knm_t, but the
+    mask is a tracer so one compiled solve serves every n in the bucket."""
+    m = z.shape[0]
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block, xp.shape[1])
+    mb = row_mask.reshape(nb, block).astype(xp.dtype)
+
+    def quad(v: Array) -> Array:
+        def body(carry, args):
+            xblk, mblk = args
+            g = kernel.cross(xblk, z) * mblk[:, None]
+            return carry + g.T @ (g @ v), None
+
+        out, _ = jax.lax.scan(body, jnp.zeros((m,), v.dtype), (xb, mb))
+        return out
+
+    def body_t(carry, args):
+        xblk, yblk = args
+        return carry + kernel.cross(xblk, z).T @ yblk, None
+
+    kty, _ = jax.lax.scan(body_t, jnp.zeros((m,), xp.dtype),
+                          (xb, (yp * row_mask).reshape(nb, block)))
+    return quad, kty
+
+
+@partial(jax.jit, static_argnames=("iters", "backend", "block"),
+         donate_argnames=("yp",))
+def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
+                        a_diag: Array, lam: Array, n: Array, *, iters: int,
+                        backend, block: int) -> Array:
+    """Preconditioner + CG + alpha recovery as one compiled program."""
+    global _FUSED_FIT_TRACES
+    _FUSED_FIT_TRACES += 1
+    row_mask = jnp.arange(xp.shape[0]) < n
+    prec = make_preconditioner(kernel, centers, a_diag, lam, n)
+    kmm = backend.gram_block(kernel, centers, centers)
+    quad, kty = _masked_knm_ops(kernel, xp, centers, yp, row_mask, block)
+
+    def matvec(v: Array) -> Array:
+        u = prec.apply(v)
+        w = quad(u) + lam * n * (kmm @ u)
+        return prec.apply_t(w)
+
+    beta = cg(matvec, prec.apply_t(kty), iters)
+    return prec.apply(beta)
+
+
+# ---------------------------------------------------------------------------
 # FALKON estimator
 # ---------------------------------------------------------------------------
 
@@ -182,16 +261,15 @@ class FalkonModel:
     centers: Array  # (M, d)
     alpha: Array  # (M,)
     kernel: Kernel
+    #: serving-time contraction backend; set by falkon_fit to the fit-time
+    #: choice, overridable per predict call. None -> platform heuristic.
+    backend: BackendLike = None
 
-    def predict(self, x: Array, *, block: int = 8192) -> Array:
-        n = x.shape[0]
-        pad = (-n) % block
-        xp = jnp.pad(x, ((0, pad), (0, 0)))
-        out = jax.lax.map(
-            lambda xb: self.kernel.cross(xb, self.centers) @ self.alpha,
-            xp.reshape(-1, block, x.shape[1]),
-        )
-        return out.reshape(-1)[:n]
+    def predict(self, x: Array, *, backend: BackendLike = None) -> Array:
+        """K(x, centers) alpha through the kernel-operator seam."""
+        spec = backend if backend is not None else self.backend
+        be = resolve_backend(spec, n=x.shape[0])
+        return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
 
 
 def falkon_fit(
@@ -205,17 +283,41 @@ def falkon_fit(
     iters: int = 20,
     backend: BackendLike = None,
     callback: Callable[[int, FalkonModel], None] | None = None,
+    fused: bool | None = None,
 ) -> FalkonModel:
     """Fit FALKON (uniform A=I) or FALKON-BLESS (A from Alg. 1/2).
 
     ``backend`` selects the K_nM operator implementation — an instance, a
     registry name ("jnp" | "pallas" | "sharded"), or None for the platform
     heuristic (repro.core.backend.default_backend).
+
+    ``fused`` selects the whole-fit compilation path (see module docstring):
+    None (default) takes it automatically when the backend is jit-safe and no
+    ``callback`` needs the host CG loop; True forces it (raising if the
+    backend cannot be traced); False forces the host-driven path.
     """
     n = x.shape[0]
     m = centers.shape[0]
     backend = resolve_backend(backend, n=n)
     a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
+    if fused is None:
+        fused = backend.jit_safe and callback is None
+    if fused:
+        if not backend.jit_safe:
+            raise ValueError(f"fused=True needs a jit-safe backend, got {backend.name!r}")
+        if callback is not None:
+            raise ValueError("the fused fit has no host CG loop; "
+                             "pass fused=False to use callback")
+        block = _fit_block(backend)
+        pad = (-n) % block
+        # yp is donated by _fused_falkon_solve, so it must be a fresh buffer
+        # even when the bucket needs no padding (x is shared, never donated).
+        yp = jnp.pad(y, (0, pad)) if pad else y + jnp.zeros((), y.dtype)
+        alpha = _fused_falkon_solve(
+            kernel, jnp.pad(x, ((0, pad), (0, 0))), yp, centers, a_diag,
+            jnp.asarray(lam, jnp.float32), jnp.asarray(n, jnp.int32),
+            iters=iters, backend=backend, block=block)
+        return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=backend)
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
     kmm = backend.gram_block(kernel, centers, centers)
     quad, kty = backend.knm_operators(kernel, x, centers, y)
@@ -229,9 +331,11 @@ def falkon_fit(
     cb = None
     if callback is not None:
         def cb(i, beta):  # noqa: E731 — host-side metric hook
-            callback(i, FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel))
+            callback(i, FalkonModel(centers=centers, alpha=prec.apply(beta),
+                                    kernel=kernel, backend=backend))
     beta = cg(matvec, b, iters, callback=cb)
-    return FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel)
+    return FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel,
+                       backend=backend)
 
 
 def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: float,

@@ -4,7 +4,10 @@
     c     = (K + lam n I)^{-1} y                          (Eq. 12, exact KRR)
 
 Both are O(n M^2) / O(n^3) dense solves; FALKON's CG must converge to the
-Def. 4 solution, which is what tests/test_falkon.py asserts.
+Def. 4 solution, which is what tests/test_falkon.py asserts. The K_nM
+contractions route through the kernel-operator ``Backend`` seam so the
+oracles run on whatever hardware path the estimators use; the returned
+models also predict through the seam.
 """
 from __future__ import annotations
 
@@ -12,24 +15,28 @@ import jax
 import jax.numpy as jnp
 
 from .falkon import FalkonModel
-from .gram import Kernel
+from .gram import BackendLike, Kernel, resolve_backend
 from .leverage import _chol_with_jitter, _psd_solve
 
 Array = jax.Array
 
 
-def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float) -> FalkonModel:
+def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float,
+                *, backend: BackendLike = None) -> FalkonModel:
     n = x.shape[0]
-    knm = kernel.cross(x, centers)
-    kmm = kernel.cross(centers, centers)
+    be = resolve_backend(backend, n=n)
+    knm = be.gram_block(kernel, x, centers)
+    kmm = be.gram_block(kernel, centers, centers)
     h = knm.T @ knm + lam * n * kmm
-    alpha = _psd_solve(h, knm.T @ y)
-    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel)
+    alpha = _psd_solve(h, be.knm_t(kernel, x, centers, y))
+    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=be)
 
 
-def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float) -> FalkonModel:
+def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float,
+              *, backend: BackendLike = None) -> FalkonModel:
     n = x.shape[0]
-    k = kernel.gram(x)
+    be = resolve_backend(backend, n=n)
+    k = be.gram_block(kernel, x, x)
     chol = _chol_with_jitter(k + lam * n * jnp.eye(n, dtype=k.dtype))
     c = jax.scipy.linalg.cho_solve((chol, True), y)
-    return FalkonModel(centers=x, alpha=c, kernel=kernel)
+    return FalkonModel(centers=x, alpha=c, kernel=kernel, backend=be)

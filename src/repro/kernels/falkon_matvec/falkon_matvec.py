@@ -1,16 +1,28 @@
-"""Pallas TPU kernel: fused FALKON CG matvec  r = K_nM^T (K_nM v).
+"""Pallas TPU kernels: the fused FALKON K_nM contractions.
 
-The O(n M d + n M) inner loop of every FALKON CG iteration. On GPU the
-reference FALKON implementation materializes K_nM block-by-block in HBM and
-runs two GEMVs per block (arithmetic intensity ~4 FLOP/B on the second
-pass). Here each (bn, d) tile of X is streamed HBM->VMEM exactly once; the
-Gram tile G = k(X_tile, Z), t = G v and r += G^T t all happen in VMEM, so
-HBM traffic is n*d reads + M writes total — the kernel is MXU-bound for
-M >= ~256 (DESIGN.md §2).
+Three operators share one tile schedule — each (bn, d) tile of X is streamed
+HBM->VMEM exactly once, the Gram tile G = k(X_tile, Z) is built in VMEM, and
+the contraction epilogue runs before the tile is discarded:
 
-Grid (n/bn,): Z (M, d) and v (M,) are VMEM-resident across the whole sweep
-(M*d <= ~4M floats for the paper's d_eff-sized center sets); the (M,) output
-block is revisited every step and accumulated.
+  * ``falkon_matvec_pallas``  r = K_nM^T (K_nM v)  — the CG quadratic matvec
+  * ``knm_t_pallas``          r = K_nM^T y         — the CG right-hand side
+  * ``knm_matvec_pallas``     r = K_nM v           — predict / KRR forward
+
+On GPU the reference FALKON implementation materializes K_nM block-by-block
+in HBM and runs two GEMVs per block (arithmetic intensity ~4 FLOP/B on the
+second pass). Fusing keeps HBM traffic at n*d reads + n (or M) writes total,
+so the kernels are MXU-bound for M >= ~256 (DESIGN.md §2).
+
+Grid (n/bn,): Z (M, d) and the (M,) vector are VMEM-resident across the
+whole sweep (M*d <= ~4M floats for the paper's d_eff-sized center sets). The
+reductions (``falkon_matvec``/``knm_t``) revisit one (M,) output block every
+step and accumulate; ``knm_matvec`` writes a private (bn,) block per step.
+
+Mixed precision (``bf16=True``): the Gram tile's dominant (bn, d) x (d, M)
+product loads its operands as bf16 and accumulates on the MXU in fp32
+(``preferred_element_type``); the row norms, distance epilogue, exp, and the
+second-stage contractions all stay fp32. See DESIGN.md §2 for the measured
+parity tolerances (kernel values ~1e-2 relative on unit-scale data).
 """
 from __future__ import annotations
 
@@ -21,8 +33,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _gram_tile(x: jax.Array, z: jax.Array, *, kind: str, inv_scale: float,
+               bf16: bool) -> jax.Array:
+    """k(X_tile, Z) in VMEM; x (bn, d) and z (M, d) are fp32.
+
+    With ``bf16`` the MXU product takes bf16 operands (fp32 accumulation);
+    the norms and epilogue are always fp32 so the only precision loss is the
+    cross-term of the squared distance.
+    """
+    xc, zc = (x.astype(jnp.bfloat16), z.astype(jnp.bfloat16)) if bf16 else (x, z)
+    prod = jax.lax.dot_general(xc, zc, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (bn, M)
+    if kind == "linear":
+        return prod
+    d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
+                     - 2.0 * prod, 0.0)
+    if kind == "gaussian":
+        return jnp.exp(-d2 * inv_scale)
+    return jnp.exp(-jnp.sqrt(d2 + 1e-30) * inv_scale)
+
+
 def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
-                   bn: int, n_valid: int):
+                   bn: int, n_valid: int, bf16: bool):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -31,32 +63,25 @@ def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
 
     x = x_ref[...].astype(jnp.float32)  # (bn, d)
     z = z_ref[...].astype(jnp.float32)  # (M, d)
-    prod = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (bn, M)
-    if kind == "linear":
-        g = prod
-    else:
-        d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
-                         - 2.0 * prod, 0.0)
-        g = jnp.exp(-d2 * inv_scale) if kind == "gaussian" else jnp.exp(
-            -jnp.sqrt(d2 + 1e-30) * inv_scale)
+    g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
     g = jnp.where(rows < n_valid, g, 0.0)  # padded X rows contribute nothing
     t = g @ v_ref[...].astype(jnp.float32)  # (bn,)
     o_ref[...] += t @ g  # G^T t, still in VMEM
 
 
-@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret", "inv_scale"))
+@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret",
+                                   "inv_scale", "bf16"))
 def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float,
                          *, kind: str = "gaussian", bn: int = 512, n_valid: int,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True, bf16: bool = False) -> jax.Array:
     """K_nM^T K_nM v for pre-padded x (n, d), z (M, d), v (M,)."""
     n, d = x.shape
     m = z.shape[0]
     assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
     return pl.pallas_call(
         partial(_matvec_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
-                n_valid=n_valid),
+                n_valid=n_valid, bf16=bf16),
         grid=(n // bn,),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
@@ -70,13 +95,8 @@ def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: fl
 
 
 def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
-                  bn: int, n_valid: int):
-    """r += y_tile^T k(X_tile, Z) — the CG right-hand side K_nM^T y, fused.
-
-    Same tile schedule as the quadratic matvec: the Gram tile never leaves
-    VMEM, so building b costs one streaming pass over X instead of a
-    materialized (n, M) Gram plus a GEMV.
-    """
+                  bn: int, n_valid: int, bf16: bool):
+    """r += y_tile^T k(X_tile, Z) — the CG right-hand side K_nM^T y, fused."""
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -85,31 +105,24 @@ def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
 
     x = x_ref[...].astype(jnp.float32)  # (bn, d)
     z = z_ref[...].astype(jnp.float32)  # (M, d)
-    prod = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (bn, M)
-    if kind == "linear":
-        g = prod
-    else:
-        d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
-                         - 2.0 * prod, 0.0)
-        g = jnp.exp(-d2 * inv_scale) if kind == "gaussian" else jnp.exp(
-            -jnp.sqrt(d2 + 1e-30) * inv_scale)
+    g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
     g = jnp.where(rows < n_valid, g, 0.0)
     o_ref[...] += y_ref[...].astype(jnp.float32) @ g  # (bn,) @ (bn, M)
 
 
-@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret", "inv_scale"))
+@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret",
+                                   "inv_scale", "bf16"))
 def knm_t_pallas(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
                  *, kind: str = "gaussian", bn: int = 512, n_valid: int,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = True, bf16: bool = False) -> jax.Array:
     """K_nM^T y for pre-padded x (n, d), z (M, d), y (n,)."""
     n, d = x.shape
     m = z.shape[0]
     assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
     return pl.pallas_call(
         partial(_knm_t_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
-                n_valid=n_valid),
+                n_valid=n_valid, bf16=bf16),
         grid=(n // bn,),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
@@ -120,3 +133,39 @@ def knm_t_pallas(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         interpret=interpret,
     )(x, z, y)
+
+
+def _knm_matvec_kernel(x_ref, z_ref, a_ref, o_ref, *, kind: str,
+                       inv_scale: float, bf16: bool):
+    """o_tile = k(X_tile, Z) alpha — the predict / KRR forward contraction.
+
+    No cross-step accumulation: each grid step owns its (bn,) output block,
+    so no init/revisit protocol is needed. Padded X rows produce garbage
+    that ops.py slices off; padded Z rows meet alpha's zero padding.
+    """
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    z = z_ref[...].astype(jnp.float32)  # (M, d)
+    g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
+    o_ref[...] = g @ a_ref[...].astype(jnp.float32)  # (bn,)
+
+
+@partial(jax.jit, static_argnames=("kind", "bn", "interpret", "inv_scale", "bf16"))
+def knm_matvec_pallas(x: jax.Array, z: jax.Array, alpha: jax.Array, inv_scale: float,
+                      *, kind: str = "gaussian", bn: int = 512,
+                      interpret: bool = True, bf16: bool = False) -> jax.Array:
+    """K_nM alpha for pre-padded x (n, d), z (M, d), alpha (M,)."""
+    n, d = x.shape
+    m = z.shape[0]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    return pl.pallas_call(
+        partial(_knm_matvec_kernel, kind=kind, inv_scale=float(inv_scale), bf16=bf16),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, z, alpha)

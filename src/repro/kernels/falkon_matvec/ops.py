@@ -1,24 +1,30 @@
-"""Public wrappers for the fused FALKON CG contractions.
+"""Public wrappers for the fused FALKON K_nM contractions.
 
-``falkon_matvec`` (K_nM^T K_nM v) and ``knm_t`` (K_nM^T y) are the two
-operators ``repro.core.backend.PallasBackend`` serves to
-``repro.core.falkon.falkon_fit``; both pad internally to tile boundaries.
+``falkon_matvec`` (K_nM^T K_nM v), ``knm_t`` (K_nM^T y) and ``knm_matvec``
+(K_nM v — predict / KRR forward) are the operators
+``repro.core.backend.PallasBackend`` serves to ``repro.core.falkon``; all
+pad internally to tile boundaries. ``bf16=True`` selects the mixed-precision
+tile path (bf16 MXU operands, fp32 accumulation — see falkon_matvec.py).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..common import default_interpret, pad_dim, round_up
-from .falkon_matvec import falkon_matvec_pallas, knm_t_pallas
-from .ref import falkon_matvec_ref, knm_t_ref
+from .falkon_matvec import falkon_matvec_pallas, knm_matvec_pallas, knm_t_pallas
+from .ref import falkon_matvec_ref, knm_matvec_ref, knm_t_ref
+
+_INV_SCALE = {"gaussian": lambda s: 1.0 / (2.0 * s**2), "laplacian": lambda s: 1.0 / s}
+
+
+def _inv_scale(kind: str, sigma: float) -> float:
+    return _INV_SCALE.get(kind, lambda s: 1.0)(sigma)
 
 
 def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,
                   kind: str = "gaussian", bn: int = 512,
-                  interpret: bool | None = None) -> jax.Array:
+                  interpret: bool | None = None, bf16: bool = False) -> jax.Array:
     """K_nM^T (K_nM v) -> (M,) fp32. Arbitrary shapes, padded internally."""
-    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -28,25 +34,25 @@ def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, 
     # padded Z rows are the all-zeros point; its kernel values are nonzero but
     # v is zero-padded so they never enter t, and we slice r back to (m,).
     vp = pad_dim(v, 0, round_up(m, 128))
-    out = falkon_matvec_pallas(xp, zp, vp, float(inv_scale), kind=kind, bn=bn,
-                               n_valid=n, interpret=interpret)
+    out = falkon_matvec_pallas(xp, zp, vp, float(_inv_scale(kind, sigma)), kind=kind,
+                               bn=bn, n_valid=n, interpret=interpret, bf16=bf16)
     return out[:m]
 
 
 def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
                           kind: str = "gaussian", bn: int = 512,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None, bf16: bool = False):
     def op(v: jax.Array) -> jax.Array:
-        return falkon_matvec(x, z, v, sigma, kind=kind, bn=bn, interpret=interpret)
+        return falkon_matvec(x, z, v, sigma, kind=kind, bn=bn, interpret=interpret,
+                             bf16=bf16)
 
     return op
 
 
 def knm_t(x: jax.Array, z: jax.Array, y: jax.Array, sigma: float = 1.0, *,
           kind: str = "gaussian", bn: int = 512,
-          interpret: bool | None = None) -> jax.Array:
+          interpret: bool | None = None, bf16: bool = False) -> jax.Array:
     """K_nM^T y -> (M,) fp32. Arbitrary shapes, padded internally."""
-    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -54,10 +60,27 @@ def knm_t(x: jax.Array, z: jax.Array, y: jax.Array, sigma: float = 1.0, *,
     xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
     zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
     yp = pad_dim(y, 0, round_up(n, bn))
-    out = knm_t_pallas(xp, zp, yp, float(inv_scale), kind=kind, bn=bn,
-                       n_valid=n, interpret=interpret)
+    out = knm_t_pallas(xp, zp, yp, float(_inv_scale(kind, sigma)), kind=kind, bn=bn,
+                       n_valid=n, interpret=interpret, bf16=bf16)
     return out[:m]
+
+
+def knm_matvec(x: jax.Array, z: jax.Array, alpha: jax.Array, sigma: float = 1.0, *,
+               kind: str = "gaussian", bn: int = 512,
+               interpret: bool | None = None, bf16: bool = False) -> jax.Array:
+    """K_nM alpha -> (n,) fp32 — the predict contraction, fused in VMEM."""
+    n, d = x.shape
+    m = z.shape[0]
+    interpret = default_interpret() if interpret is None else interpret
+    dp = round_up(d, 128)
+    xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
+    zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
+    ap = pad_dim(alpha, 0, round_up(m, 128))  # zero alpha on padded Z rows
+    out = knm_matvec_pallas(xp, zp, ap, float(_inv_scale(kind, sigma)), kind=kind,
+                            bn=bn, interpret=interpret, bf16=bf16)
+    return out[:n]
 
 
 falkon_matvec_reference = falkon_matvec_ref
 knm_t_reference = knm_t_ref
+knm_matvec_reference = knm_matvec_ref

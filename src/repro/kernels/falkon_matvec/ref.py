@@ -15,3 +15,9 @@ def knm_t_ref(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
               *, kind: str = "gaussian") -> jax.Array:
     g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
     return g.T @ y.astype(jnp.float32)
+
+
+def knm_matvec_ref(x: jax.Array, z: jax.Array, alpha: jax.Array, inv_scale: float,
+                   *, kind: str = "gaussian") -> jax.Array:
+    g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
+    return g @ alpha.astype(jnp.float32)

@@ -19,10 +19,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _gram_kernel(x_ref, z_ref, o_ref, *, kind: str, inv_scale: float):
+def _gram_kernel(x_ref, z_ref, o_ref, *, kind: str, inv_scale: float, bf16: bool):
     x = x_ref[...].astype(jnp.float32)  # (bn, d)
     z = z_ref[...].astype(jnp.float32)  # (bm, d)
-    prod = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
+    # bf16: MXU operands dropped to bf16, fp32 accumulation; norms/epilogue
+    # stay fp32 (only the distance cross-term loses precision — DESIGN.md §2).
+    xc, zc = (x.astype(jnp.bfloat16), z.astype(jnp.bfloat16)) if bf16 else (x, z)
+    prod = jax.lax.dot_general(xc, zc, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)  # (bn, bm) on MXU
     if kind == "linear":
         o_ref[...] = prod.astype(o_ref.dtype)
@@ -39,15 +42,16 @@ def _gram_kernel(x_ref, z_ref, o_ref, *, kind: str, inv_scale: float):
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-@partial(jax.jit, static_argnames=("kind", "bn", "bm", "interpret", "inv_scale"))
+@partial(jax.jit, static_argnames=("kind", "bn", "bm", "interpret", "inv_scale", "bf16"))
 def gram_pallas(x: jax.Array, z: jax.Array, inv_scale: float, *, kind: str = "gaussian",
-                bn: int = 256, bm: int = 256, interpret: bool = True) -> jax.Array:
+                bn: int = 256, bm: int = 256, interpret: bool = True,
+                bf16: bool = False) -> jax.Array:
     """k(X, Z) for pre-padded inputs: n % bn == 0, m % bm == 0, d % 128 == 0."""
     n, d = x.shape
     m = z.shape[0]
     assert n % bn == 0 and m % bm == 0 and d % 128 == 0, (n, m, d)
     return pl.pallas_call(
-        partial(_gram_kernel, kind=kind, inv_scale=float(inv_scale)),
+        partial(_gram_kernel, kind=kind, inv_scale=float(inv_scale), bf16=bf16),
         grid=(n // bn, m // bm),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i, j: (i, 0)),

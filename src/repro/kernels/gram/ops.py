@@ -10,8 +10,14 @@ from .ref import gram_ref
 
 
 def gram(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussian",
-         bn: int = 256, bm: int = 256, interpret: bool | None = None) -> jax.Array:
-    """k(X, Z) -> (n, m). Arbitrary shapes; pads internally to (bn, bm, 128)."""
+         bn: int = 256, bm: int = 256, interpret: bool | None = None,
+         bf16: bool = False) -> jax.Array:
+    """k(X, Z) -> (n, m). Arbitrary shapes; pads internally to (bn, bm, 128).
+
+    ``bf16`` drops the MXU operands of the distance cross-term to bf16 with
+    fp32 accumulation (~1e-2 relative tolerance on kernel values for
+    unit-scale data; see DESIGN.md §2).
+    """
     if kind == "gaussian":
         inv_scale = 1.0 / (2.0 * sigma**2)
     elif kind == "laplacian":
@@ -24,7 +30,7 @@ def gram(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussia
     xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, round_up(d, 128))
     zp = pad_dim(pad_dim(z, 0, round_up(m, bm)), 1, round_up(d, 128))
     out = gram_pallas(xp, zp, float(inv_scale), kind=kind, bn=bn, bm=bm,
-                      interpret=interpret)
+                      interpret=interpret, bf16=bf16)
     return out[:n, :m]
 
 

@@ -10,13 +10,13 @@ from .ref import quadform_ref
 
 
 def quadform(g: jax.Array, w: jax.Array, *, bn: int = 256, bm: int = 256,
-             interpret: bool | None = None) -> jax.Array:
+             interpret: bool | None = None, bf16: bool = False) -> jax.Array:
     """s_i = g_i^T W g_i for each row of G. G (n, m), W (m, m) -> (n,) fp32."""
     n, m = g.shape
     interpret = default_interpret() if interpret is None else interpret
     gp = pad_dim(pad_dim(g, 0, round_up(n, bn)), 1, round_up(m, bm))
     wp = pad_dim(pad_dim(w, 0, round_up(m, bm)), 1, round_up(m, bm))
-    return quadform_pallas(gp, wp, bn=bn, bm=bm, interpret=interpret)[:n]
+    return quadform_pallas(gp, wp, bn=bn, bm=bm, interpret=interpret, bf16=bf16)[:n]
 
 
 quadform_reference = quadform_ref

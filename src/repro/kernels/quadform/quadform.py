@@ -20,7 +20,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _quadform_kernel(g_kj_ref, w_ref, g_ik_ref, o_ref, acc_ref, *, nj: int, nk: int):
+def _quadform_kernel(g_kj_ref, w_ref, g_ik_ref, o_ref, acc_ref, *, nj: int, nk: int,
+                     bf16: bool):
     k = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -32,8 +33,11 @@ def _quadform_kernel(g_kj_ref, w_ref, g_ik_ref, o_ref, acc_ref, *, nj: int, nk: 
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    g = g_kj_ref[...].astype(jnp.float32)  # (bn, bj) — G[:, j-tile]
-    w = w_ref[...].astype(jnp.float32)  # (bj, bk)
+    # bf16: MXU operands only; the fp32 VMEM accumulator and the elementwise
+    # epilogue keep full precision (DESIGN.md §2 documents the tolerances).
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    g = g_kj_ref[...].astype(dt)  # (bn, bj) — G[:, j-tile]
+    w = w_ref[...].astype(dt)  # (bj, bk)
     acc_ref[...] += jax.lax.dot_general(g, w, (((1,), (0,)), ((), ())),
                                         preferred_element_type=jnp.float32)
 
@@ -43,15 +47,15 @@ def _quadform_kernel(g_kj_ref, w_ref, g_ik_ref, o_ref, acc_ref, *, nj: int, nk: 
         o_ref[...] += jnp.sum(acc_ref[...] * gk, axis=1)
 
 
-@partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+@partial(jax.jit, static_argnames=("bn", "bm", "interpret", "bf16"))
 def quadform_pallas(g: jax.Array, w: jax.Array, *, bn: int = 256, bm: int = 256,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True, bf16: bool = False) -> jax.Array:
     """rowsum((G @ W) * G) for pre-padded G (n, m), W (m, m)."""
     n, m = g.shape
     assert n % bn == 0 and m % bm == 0, (n, m)
     nj = nk = m // bm
     return pl.pallas_call(
-        partial(_quadform_kernel, nj=nj, nk=nk),
+        partial(_quadform_kernel, nj=nj, nk=nk, bf16=bf16),
         grid=(n // bn, nk, nj),
         in_specs=[
             pl.BlockSpec((bn, bm), lambda i, k, j: (i, j)),  # G[:, j]

@@ -1,3 +1,4 @@
 from .engine import ServeEngine, prefill, sample_greedy
+from .krr import KrrServer, pow2_bucket
 
-__all__ = ["ServeEngine", "prefill", "sample_greedy"]
+__all__ = ["ServeEngine", "prefill", "sample_greedy", "KrrServer", "pow2_bucket"]

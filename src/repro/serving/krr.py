@@ -1,0 +1,124 @@
+"""Serving-grade batched KRR prediction — micro-batching over
+``FalkonModel.predict`` with padded pow2 row buckets (DESIGN.md §4).
+
+The heavy-traffic scenario: many concurrent clients each submit a handful of
+query points. Dispatching per request wastes the accelerator (one launch and
+one sub-tile Gram block per request) and, worse, every distinct request size
+is a fresh jit shape — unbounded clients means an unbounded compile cache.
+
+``KrrServer`` fixes both: pending requests are packed into *waves* of at
+most ``max_wave`` rows, each wave is zero-padded up to a power-of-two row
+bucket (never below ``min_bucket``), and one fused ``knm_matvec`` dispatch
+through the kernel-operator ``Backend`` seam serves the whole wave. The jit
+cache then holds at most ``log2(max_wave / min_bucket) + 1`` executables per
+model, independent of traffic.
+
+    server = KrrServer(model)
+    rid = server.submit(x_req)        # queue a (r, d) request
+    preds = server.flush()            # {rid: (r,) predictions}
+    server.predict(x)                 # submit + flush convenience
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.falkon import FalkonModel
+from ..core.gram import BackendLike
+
+Array = jax.Array
+
+
+def pow2_bucket(rows: int, min_bucket: int) -> int:
+    """Smallest power-of-two >= rows, floored at min_bucket."""
+    return max(min_bucket, 1 << max(0, rows - 1).bit_length())
+
+
+@dataclasses.dataclass
+class KrrServer:
+    """Micro-batching front end over one FALKON/KRR model.
+
+    Attributes:
+      model: the fitted estimator; prediction runs through its backend seam.
+      backend: per-server override of the model's fit-time backend.
+      max_wave: row budget per fused dispatch — requests are packed into
+        waves of at most this many rows (a single larger request still goes
+        out alone, padded to its own pow2 bucket).
+      min_bucket: smallest padded bucket; keeps tiny waves off sub-tile
+        shapes and bounds the bucket count from below.
+    """
+
+    model: FalkonModel
+    backend: BackendLike = None
+    max_wave: int = 4096
+    min_bucket: int = 64
+
+    def __post_init__(self):
+        if self.max_wave < 1 or self.min_bucket < 1:
+            raise ValueError("max_wave and min_bucket must be positive")
+        self.reset()
+
+    def reset(self) -> None:
+        """Drop queued requests and zero the counters (e.g. after warmup)."""
+        self._queue: List[Tuple[int, Array]] = []
+        self._next_rid = 0
+        self._pending_rows = 0
+        # serving counters: dispatches vs requests is the batching win;
+        # padded_rows / rows the padding overhead; buckets the jit-cache set.
+        self.stats = {"requests": 0, "rows": 0, "dispatches": 0,
+                      "padded_rows": 0, "buckets": set()}
+
+    def submit(self, x: Array) -> int:
+        """Queue a (r, d) request; returns its id (see flush)."""
+        x = jnp.asarray(x)
+        d = self.model.centers.shape[1]
+        if x.ndim != 2 or x.shape[0] == 0 or x.shape[1] != d:
+            raise ValueError(f"request must be a non-empty (r, {d}) array, got {x.shape}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, x))
+        self._pending_rows += x.shape[0]
+        self.stats["requests"] += 1
+        self.stats["rows"] += x.shape[0]
+        return rid
+
+    @property
+    def pending_rows(self) -> int:
+        return self._pending_rows
+
+    def flush(self) -> Dict[int, Array]:
+        """Serve every queued request; returns {request id: (r,) predictions}."""
+        out: Dict[int, Array] = {}
+        while self._queue:
+            wave: List[Tuple[int, Array]] = [self._queue.pop(0)]
+            rows = wave[0][1].shape[0]
+            # pack until the row budget: a request never splits across waves
+            while self._queue and rows + self._queue[0][1].shape[0] <= self.max_wave:
+                rid, x = self._queue.pop(0)
+                wave.append((rid, x))
+                rows += x.shape[0]
+            self._pending_rows -= rows
+            xw = wave[0][1] if len(wave) == 1 else jnp.concatenate(
+                [x for _, x in wave], axis=0)
+            bucket = pow2_bucket(rows, self.min_bucket)
+            xp = jnp.pad(xw, ((0, bucket - rows), (0, 0)))
+            pred = self.model.predict(xp, backend=self.backend)
+            self.stats["dispatches"] += 1
+            self.stats["padded_rows"] += bucket - rows
+            self.stats["buckets"].add(bucket)
+            off = 0
+            for rid, x in wave:
+                out[rid] = pred[off:off + x.shape[0]]
+                off += x.shape[0]
+        return out
+
+    def predict(self, x: Array) -> Array:
+        """One-shot convenience: submit + flush a single request.
+
+        Still bucket-padded, so ad-hoc callers share the serving jit cache.
+        """
+        rid = self.submit(x)
+        return self.flush()[rid]

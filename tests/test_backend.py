@@ -43,6 +43,17 @@ def test_default_backend_heuristic_off_tpu():
     assert isinstance(default_backend(10_000_000), JnpBackend)
 
 
+def test_repro_backend_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    assert isinstance(default_backend(), PallasBackend)
+    assert isinstance(resolve_backend(None), PallasBackend)  # threads through
+    monkeypatch.setenv("REPRO_BACKEND", "auto")
+    assert isinstance(default_backend(), JnpBackend)  # falls through to heuristic
+    monkeypatch.setenv("REPRO_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        default_backend()
+
+
 def test_backends_are_hashable_jit_keys():
     assert hash(JnpBackend()) == hash(JnpBackend())
     assert JnpBackend() == JnpBackend()
@@ -88,6 +99,70 @@ def test_knm_operators_parity(name):
                                atol=1e-4 * float(jnp.abs(g.T @ y).max()))
 
 
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("n", [256, 300])  # tile-aligned and ragged (n % block != 0)
+def test_knm_matvec_parity(name, n):
+    x, _, _ = _problem(n=n)
+    z = jax.random.normal(jax.random.PRNGKey(7), (48, x.shape[1]))
+    v = jax.random.normal(jax.random.PRNGKey(5), (48,))
+    ref = KERN.cross(x, z) @ v
+    out = resolve_backend(name).knm_matvec(KERN, x, z, v)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(out, ref, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(ref).max()))
+
+
+def test_jnp_knm_matvec_multiblock_ragged():
+    """The streaming branch: n spans several blocks and overhangs the last."""
+    x, _, _ = _problem(n=300)
+    z = jax.random.normal(jax.random.PRNGKey(7), (32, x.shape[1]))
+    v = jax.random.normal(jax.random.PRNGKey(5), (32,))
+    out = JnpBackend(block=128).knm_matvec(KERN, x, z, v)
+    np.testing.assert_allclose(out, KERN.cross(x, z) @ v, rtol=1e-5, atol=1e-5)
+
+
+# -- mixed precision (PallasBackend(bf16=True)) ------------------------------
+#
+# bf16 MXU operands, fp32 accumulation: only the distance cross-term loses
+# precision, so unit-scale data stays within ~3e-2 absolute of fp32
+# (DESIGN.md §2.3). These tolerances are the documented contract.
+
+BF16 = PallasBackend(interpret=True, bf16=True)
+
+
+def test_bf16_is_a_distinct_jit_key():
+    assert BF16 != PallasBackend(interpret=True)
+    hash(BF16)  # usable as a static jit argument
+    assert BF16.bf16 and not PallasBackend().bf16
+
+
+def test_bf16_gram_tolerance():
+    x, _, _ = _problem(n=300)
+    z = jax.random.normal(jax.random.PRNGKey(9), (70, x.shape[1]))
+    out = BF16.gram_block(KERN, x, z)
+    np.testing.assert_allclose(out, KERN.cross(x, z), atol=3e-2)
+
+
+def test_bf16_knm_matvec_tolerance():
+    x, _, _ = _problem(n=300)
+    z = jax.random.normal(jax.random.PRNGKey(9), (48, x.shape[1]))
+    v = jax.random.normal(jax.random.PRNGKey(5), (48,))
+    ref = KERN.cross(x, z) @ v
+    out = BF16.knm_matvec(KERN, x, z, v)
+    np.testing.assert_allclose(out, ref, atol=3e-2 * float(jnp.abs(ref).max()))
+
+
+def test_bf16_masked_quadform_tolerance():
+    x, _, z = _problem(n=256, m=48)
+    mbuf = 64
+    mask = jnp.arange(mbuf) < 48
+    zbuf = jnp.where(mask[:, None], jnp.pad(z, ((0, mbuf - 48), (0, 0))), 0.0)
+    reg = jnp.where(mask, 1e-3 * x.shape[0], 1.0)
+    ref = JnpBackend().masked_quadform(KERN, x, zbuf, mask, reg)
+    out = BF16.masked_quadform(KERN, x, zbuf, mask, reg)
+    np.testing.assert_allclose(out, ref, atol=5e-2 * float(jnp.abs(ref).max()))
+
+
 # -- end-to-end parity (the acceptance bar) ----------------------------------
 
 
@@ -111,8 +186,14 @@ def test_falkon_predictions_match_jnp(name):
     x, y, z = _problem()
     ref = falkon_fit(KERN, x, y, z, 1e-3, iters=25, backend="jnp")
     fk = falkon_fit(KERN, x, y, z, 1e-3, iters=25, backend=name)
+    # the model remembers its fit-time backend, so each predict below also
+    # exercises that backend's knm_matvec end to end
+    assert fk.backend is not None and fk.backend.name == name
     pr, pf = ref.predict(x), fk.predict(x)
     assert float(jnp.max(jnp.abs(pr - pf))) < 1e-4, name
+    # per-call override routes the same model through another backend
+    po = fk.predict(x, backend="jnp")
+    assert float(jnp.max(jnp.abs(po - pr))) < 1e-4, name
 
 
 def test_pallas_backend_runs_interpret_explicitly():

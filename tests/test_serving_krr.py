@@ -1,0 +1,100 @@
+"""KrrServer (serving/krr.py): batched predictions match the direct path
+exactly, waves respect the row budget, buckets are pow2 and bounded."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import falkon_fit, make_kernel
+from repro.serving import KrrServer, pow2_bucket
+
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+@pytest.fixture(scope="module")
+def model():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1] ** 2
+    return falkon_fit(KERN, x, y, x[:48], 1e-3, iters=15, backend="jnp")
+
+
+def _requests(seeds_and_sizes):
+    return [jax.random.normal(jax.random.PRNGKey(s), (r, 6))
+            for s, r in seeds_and_sizes]
+
+
+def test_pow2_bucket():
+    assert pow2_bucket(1, 64) == 64
+    assert pow2_bucket(64, 64) == 64
+    assert pow2_bucket(65, 64) == 128
+    assert pow2_bucket(1000, 64) == 1024
+    assert pow2_bucket(1024, 64) == 1024
+
+
+def test_batched_matches_direct(model):
+    server = KrrServer(model, max_wave=512, min_bucket=64)
+    reqs = _requests([(1, 3), (2, 17), (3, 64), (4, 100), (5, 1)])
+    rids = [server.submit(q) for q in reqs]
+    out = server.flush()
+    assert server.pending_rows == 0
+    for rid, q in zip(rids, reqs):
+        np.testing.assert_allclose(out[rid], model.predict(q), rtol=1e-6, atol=1e-6)
+    # all five requests fit one wave (185 rows <= 512)
+    assert server.stats["dispatches"] == 1
+    assert server.stats["buckets"] == {256}
+
+
+def test_waves_respect_max_wave(model):
+    server = KrrServer(model, max_wave=128, min_bucket=32)
+    reqs = _requests([(i, 50) for i in range(5)])  # 250 rows, 128-row budget
+    rids = [server.submit(q) for q in reqs]
+    out = server.flush()
+    assert server.stats["dispatches"] == 3  # 100 + 100 + 50
+    for rid, q in zip(rids, reqs):
+        np.testing.assert_allclose(out[rid], model.predict(q), rtol=1e-6, atol=1e-6)
+
+
+def test_oversized_request_goes_out_alone(model):
+    server = KrrServer(model, max_wave=64, min_bucket=32)
+    big = _requests([(9, 200)])[0]
+    server.submit(_requests([(8, 10)])[0])
+    rid = server.submit(big)
+    out = server.flush()
+    np.testing.assert_allclose(out[rid], model.predict(big), rtol=1e-6, atol=1e-6)
+    assert 256 in server.stats["buckets"]  # 200 rows -> pow2 bucket 256
+
+
+def test_buckets_are_pow2_and_bounded(model):
+    server = KrrServer(model, max_wave=256, min_bucket=32)
+    for s in range(20):
+        server.submit(_requests([(s, 1 + (s * 37) % 90)])[0])
+        server.flush()
+    buckets = server.stats["buckets"]
+    assert all(b >= 32 and (b & (b - 1)) == 0 for b in buckets)
+    # jit-cache bound: at most log2(max_wave/min_bucket)+1 shapes ever compiled
+    assert len(buckets) <= 4
+
+
+def test_predict_convenience_and_validation(model):
+    server = KrrServer(model)
+    q = _requests([(11, 7)])[0]
+    np.testing.assert_allclose(server.predict(q), model.predict(q),
+                               rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError, match=r"\(r, 6\)"):
+        server.submit(jnp.zeros((5,)))
+    with pytest.raises(ValueError, match=r"\(r, 6\)"):
+        server.submit(jnp.zeros((0, 6)))
+    # wrong feature dim is rejected at submit, before it can poison a wave
+    with pytest.raises(ValueError, match=r"\(r, 6\)"):
+        server.submit(jnp.zeros((5, 8)))
+
+
+def test_reset_clears_queue_and_stats(model):
+    server = KrrServer(model)
+    server.submit(_requests([(12, 9)])[0])
+    assert server.pending_rows == 9
+    server.reset()
+    assert server.pending_rows == 0
+    assert server.flush() == {}
+    assert server.stats["requests"] == 0 and server.stats["dispatches"] == 0

@@ -28,8 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (bless, bless_r, exact_rls, falkon_fit, make_kernel,
-                        recursive_rls, squeak, uniform_centers)
+from repro.api import (BlessRSampler, BlessSampler, FalkonRegressor, FitConfig,
+                       RecursiveRlsSampler, SqueakSampler, UniformSampler,
+                       make_kernel)
+from repro.core import exact_rls
 from repro.core.leverage import approx_rls_all
 
 _RECORDS: list[dict] = []
@@ -91,46 +93,40 @@ def _racc_stats(scores, ell):
 
 
 def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3, backend=None) -> None:
+    """Every method is a repro.api Sampler: one CenterSet contract, one
+    scoring path (Eq. 3 at the target lam), apples-to-apples."""
     x = _data(n)
     kern = make_kernel("gaussian", sigma=2.0)
     ell = exact_rls(kern, x, lam)
     key = jax.random.PRNGKey(0)
     lamj = jnp.asarray(lam)
 
-    res, us = timed(lambda: bless(key, x, kern, lam, q2=4.0, q1=4.0, backend=backend))
-    m, q5, q95 = _racc_stats(res.scores(kern, x, backend=backend), ell)
-    emit("fig1.bless", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
+    def run(tag, sampler):
+        cs, us = timed(lambda: sampler.sample(key, x, kern, backend=backend))
+        m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
+        emit(f"fig1.{tag}", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
+        return int(cs.count)
 
-    res, us = timed(lambda: bless_r(key, x, kern, lam, q2=4.0, backend=backend))
-    m, q5, q95 = _racc_stats(res.scores(kern, x, backend=backend), ell)
-    emit("fig1.bless_r", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={res.final.m_h}")
-
-    mref = res.final.m_h
-    cs, us = timed(lambda: squeak(key, x, kern, lam, m_cap=mref, backend=backend))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
-    emit("fig1.squeak", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
-
-    cs, us = timed(lambda: recursive_rls(key, x, kern, lam, m_cap=mref, backend=backend))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
-    emit("fig1.rrls", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={int(cs.count)}")
-
-    cs, us = timed(lambda: uniform_centers(key, n, mref))
-    m, q5, q95 = _racc_stats(approx_rls_all(kern, x, cs, lamj, backend=backend), ell)
-    emit("fig1.uniform", us, f"racc={m:.3f};q5={q5:.2f};q95={q95:.2f};M={mref}")
+    run("bless", BlessSampler(lam=lam, q2=4.0, q1=4.0))
+    mref = run("bless_r", BlessRSampler(lam=lam, q2=4.0))
+    run("squeak", SqueakSampler(lam=lam, m_cap=mref))
+    run("rrls", RecursiveRlsSampler(lam=lam, m_cap=mref))
+    run("uniform", UniformSampler(m=mref))
 
 
 def bench_fig2_runtime_scaling(lam: float = 2e-3, backend=None,
                                sizes=(1000, 2000, 4000, 8000)) -> None:
-    kern = make_kernel("gaussian", sigma=2.0)
     key = jax.random.PRNGKey(0)
+    kern = make_kernel("gaussian", sigma=2.0)
+    samplers = (
+        ("bless", BlessSampler(lam=lam, q2=3.0, q1=3.0)),
+        ("squeak", SqueakSampler(lam=lam, m_cap=600)),
+        ("rrls", RecursiveRlsSampler(lam=lam, m_cap=600)),
+    )
     for n in sizes:
         x = _data(n)
-        for name, fn in (
-            ("bless", lambda: bless(key, x, kern, lam, q2=3.0, q1=3.0, backend=backend)),
-            ("squeak", lambda: squeak(key, x, kern, lam, m_cap=600, backend=backend)),
-            ("rrls", lambda: recursive_rls(key, x, kern, lam, m_cap=600, backend=backend)),
-        ):
-            _, us = timed(fn)
+        for name, sampler in samplers:
+            _, us = timed(lambda: sampler.sample(key, x, kern, backend=backend))
             emit(f"fig2.{name}.n{n}", us, f"n={n}")
 
 
@@ -142,25 +138,31 @@ def bench_table1_complexity(n: int = 2000, backend=None) -> None:
     q2 = 3.0
     for lam in (1e-2, 3e-3, 1e-3):
         deff = float(jnp.sum(exact_rls(kern, x, lam)))
-        res, us = timed(lambda: bless(key, x, kern, lam, q2=q2, q1=3.0, backend=backend))
+        sampler = BlessSampler(lam=lam, q2=q2, q1=3.0)
+        res, us = timed(lambda: sampler.ladder(key, x, kern, backend=backend))
         emit(f"table1.lam{lam:g}", us,
              f"deff={deff:.1f};M={res.final.m_h};q2*deff={q2 * deff:.1f};H={len(res.levels)}")
 
 
 def bench_fig45_falkon(n: int = 3000, m_target: int = 250, n_test: int = 800,
                        backend=None) -> None:
-    """Error per CG iteration: BLESS centers+weights vs uniform centers."""
+    """Error per CG iteration: BLESS centers+weights vs uniform centers.
+    Same estimator slot, two samplers — the api's swap-the-sampler story."""
     x, y, xte, yte = _classif(n, n_test)
     kern = make_kernel("gaussian", sigma=2.0)
     lam_falkon, lam_bless = 1e-5, 1e-3
 
-    res = bless(jax.random.PRNGKey(0), x, kern, lam_bless, q2=3.0, m_cap=m_target,
-                backend=backend)
-    mh = res.final.m_h
-    idx = res.final.centers.idx[:mh]
-    a = res.final.centers.weight[:mh]
+    cs_bless = BlessSampler(lam=lam_bless, q2=3.0, m_cap=m_target).sample(
+        jax.random.PRNGKey(0), x, kern, backend=backend)
+    mh = int(cs_bless.count)
+    cs_uni = UniformSampler(m=mh, replace=False, weights="identity").sample(
+        jax.random.PRNGKey(1), x, kern)
 
-    def err_curve(centers, a_diag, tag):
+    def err_curve(cs, tag):
+        est = FalkonRegressor(kernel=kern,
+                              config=FitConfig(lam=lam_falkon, iters=20,
+                                               backend=backend))
+
         def run():
             errs = []
 
@@ -168,32 +170,38 @@ def bench_fig45_falkon(n: int = 3000, m_target: int = 250, n_test: int = 800,
                 pred = jnp.sign(model.predict(xte))
                 errs.append(float(jnp.mean(pred != yte)))
 
-            falkon_fit(kern, x, y, centers, lam_falkon, a_diag=a_diag, iters=20,
-                       backend=backend, callback=cb)
+            est.fit(x, y, center_set=cs, callback=cb)
             return errs
 
         errs, us = timed(run)
         best5 = min(errs[:5])
-        emit(f"fig45.{tag}", us, f"err@5={best5:.4f};err@20={errs[-1]:.4f};M={centers.shape[0]}")
+        emit(f"fig45.{tag}", us, f"err@5={best5:.4f};err@20={errs[-1]:.4f};M={mh}")
 
-    err_curve(x[idx], a, "falkon_bless")
-    ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
-    err_curve(x[ku], None, "falkon_uni")
+    err_curve(cs_bless, "falkon_bless")
+    err_curve(cs_uni, "falkon_uni")
 
 
 def bench_fig3_lambda_stability(n: int = 2000, m_cap: int = 250, n_test: int = 600,
                                 backend=None) -> None:
+    """Lambda sweep on fixed centers — warm-start refits riding the fused-fit
+    jit cache (lam is traced: every lam after the first is a cache hit)."""
     x, y, xte, yte = _classif(n, n_test)
     kern = make_kernel("gaussian", sigma=2.0)
-    res = bless(jax.random.PRNGKey(0), x, kern, 1e-3, q2=3.0, m_cap=m_cap, backend=backend)
-    mh = res.final.m_h
-    zc, a = x[res.final.centers.idx[:mh]], res.final.centers.weight[:mh]
-    ku = jax.random.choice(jax.random.PRNGKey(1), n, (mh,), replace=False)
+    cs_bless = BlessSampler(lam=1e-3, q2=3.0, m_cap=m_cap).sample(
+        jax.random.PRNGKey(0), x, kern, backend=backend)
+    mh = int(cs_bless.count)
+    cs_uni = UniformSampler(m=mh, replace=False, weights="identity").sample(
+        jax.random.PRNGKey(1), x, kern)
+    ests = {tag: FalkonRegressor(kernel=kern, warm_start=True,
+                                 config=FitConfig(lam=1e-3, iters=5, backend=backend))
+            for tag in ("bless", "uni")}
+    ests["bless"].fit(x, y, center_set=cs_bless)  # installs the centers
+    ests["uni"].fit(x, y, center_set=cs_uni)
     for lam in (1e-3, 1e-5, 1e-7):
-        for tag, (c, ad) in {"bless": (zc, a), "uni": (x[ku], None)}.items():
-            model, us = timed(lambda: falkon_fit(kern, x, y, c, lam, a_diag=ad,
-                                                 iters=5, backend=backend))
-            err = float(jnp.mean(jnp.sign(model.predict(xte)) != yte))
+        for tag, est in ests.items():
+            est.config = FitConfig(lam=lam, iters=5, backend=backend)
+            _, us = timed(lambda: est.fit(x, y))  # warm start: centers reused
+            err = float(jnp.mean(jnp.sign(est.predict(xte)) != yte))
             emit(f"fig3.{tag}.lam{lam:g}", us, f"cerr@5it={err:.4f}")
 
 

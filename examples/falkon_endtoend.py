@@ -15,8 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import BlessSampler, FalkonRegressor, FitConfig, make_kernel
 from repro.checkpoint import save_checkpoint
-from repro.core import bless, falkon_fit, make_kernel
 from repro.core.distributed import data_mesh, falkon_fit_distributed
 
 
@@ -53,9 +53,9 @@ def main() -> None:
     x, y, xte, yte = xa[: args.n], ya[: args.n], xa[args.n:], ya[args.n:]
     kern = make_kernel("gaussian", sigma=4.0)  # the paper's SUSY sigma
 
+    sampler = BlessSampler(lam=args.lam_bless, q1=3.0, q2=3.0, m_cap=args.m_cap)
     t0 = time.time()
-    res = bless(jax.random.PRNGKey(0), x, kern, args.lam_bless, q1=3.0, q2=3.0,
-                m_cap=args.m_cap, backend=backend)
+    res = sampler.ladder(jax.random.PRNGKey(0), x, kern, backend=backend)
     t_bless = time.time() - t0
     m = res.final.m_h
     print(f"BLESS: {len(res.levels)} levels, M = {m} centers in {t_bless:.1f}s "
@@ -71,9 +71,11 @@ def main() -> None:
             a_diag=res.final.centers.weight[:m], iters=args.iters)
     else:
         print(f"FALKON: CG on the {backend!r} backend")
-        model = falkon_fit(
-            kern, x, y, x[res.final.centers.idx[:m]], args.lam_falkon,
-            a_diag=res.final.centers.weight[:m], iters=args.iters, backend=backend)
+        est = FalkonRegressor(kernel=kern, sampler=sampler,
+                              config=FitConfig(lam=args.lam_falkon,
+                                               iters=args.iters, backend=backend))
+        # the ladder above already sampled (J, A): hand it straight to fit
+        model = est.fit(x, y, center_set=res.final.centers).model_
     t_falkon = time.time() - t0
 
     pred_tr = jnp.sign(model.predict(x[:10000]))

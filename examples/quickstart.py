@@ -1,4 +1,5 @@
-"""Quickstart: BLESS leverage-score sampling + FALKON-BLESS in ~40 lines.
+"""Quickstart: the ``repro.api`` front door in ~40 lines — pluggable
+sampler, sklearn-style estimator, swappable kernel family.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -10,7 +11,9 @@ also take an explicit ``--backend`` flag).
 import jax
 import jax.numpy as jnp
 
-from repro.core import (bless, exact_rls, falkon_bless_fit, make_kernel)
+from repro.api import (BlessSampler, ExactRlsSampler, FalkonRegressor,
+                       FitConfig, kernel_family_names, make_kernel)
+from repro.core import approx_rls_all, exact_rls
 
 # --- data: clustered inputs => low effective dimension (the regime
 # leverage scores are built for) -------------------------------------------
@@ -25,18 +28,29 @@ kern = make_kernel("gaussian", sigma=2.0)
 lam = 1e-3
 
 # --- 1. approximate leverage scores with BLESS (Alg. 1) ---------------------
-res = bless(jax.random.PRNGKey(1), x, kern, lam, q1=4.0, q2=4.0)
+sampler = BlessSampler(lam=lam, q1=4.0, q2=4.0)
+res = sampler.ladder(jax.random.PRNGKey(1), x, kern)  # the full lam path
 print(f"BLESS: {len(res.levels)} ladder levels, final |J| = {res.final.m_h} "
       f"(d_eff estimate {res.final.d_h:.1f})")
 
 ell = exact_rls(kern, x, lam)  # O(n^3) oracle, for demonstration only
-racc = res.scores(kern, x) / ell
+racc = approx_rls_all(kern, x, res.final.centers, jnp.asarray(lam)) / ell
 print(f"score accuracy: mean R-ACC {float(racc.mean()):.3f}, "
       f"5th/95th pct {float(jnp.quantile(racc, .05)):.2f}/{float(jnp.quantile(racc, .95)):.2f}")
 
-# --- 2. FALKON-BLESS: preconditioned CG ridge regression on BLESS centers ---
-model = falkon_bless_fit(jax.random.PRNGKey(2), kern, x, y,
-                         lam_bless=1e-3, lam_falkon=1e-5, iters=25, m_cap=400)
-mse = float(jnp.mean((model.predict(x) - y) ** 2))
-print(f"FALKON-BLESS: M = {model.centers.shape[0]} centers, "
-      f"train MSE {mse:.4f} (var(y) = {float(jnp.var(y)):.4f})")
+# --- 2. FALKON-BLESS: sampler slot + estimator slot, composed ---------------
+est = FalkonRegressor(kernel=kern,
+                      sampler=BlessSampler(lam=1e-3, q2=3.0, m_cap=400),
+                      config=FitConfig(lam=1e-5, iters=25, seed=2))
+est.fit(x, y)
+mse = float(jnp.mean((est.predict(x) - y) ** 2))
+print(f"FALKON-BLESS: M = {est.centers_.shape[0]} centers, "
+      f"train MSE {mse:.4f} (R^2 {est.score(x, y):.3f})")
+
+# --- 3. the slots are swappable: oracle sampler, another kernel family ------
+est_oracle = FalkonRegressor(kernel="matern32", sigma=2.0,
+                             sampler=ExactRlsSampler(m=300, lam=lam),
+                             config=FitConfig(lam=1e-5, iters=25, seed=3))
+est_oracle.fit(x, y)
+print(f"matern32 + exact-RLS oracle sampler: R^2 {est_oracle.score(x, y):.3f} "
+      f"(families available: {kernel_family_names()})")

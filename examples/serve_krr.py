@@ -15,8 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import falkon_bless_fit, make_kernel
-from repro.serving import KrrServer
+from repro.api import (BlessSampler, FalkonRegressor, FitConfig, KrrServer,
+                       make_kernel)
 
 
 def main() -> None:
@@ -37,13 +37,16 @@ def main() -> None:
     y = jnp.sin(2 * x[:, 0]) * jnp.tanh(x[:, 1]) + 0.05 * jax.random.normal(ky, (n,))
     kern = make_kernel("gaussian", sigma=2.0)
     t0 = time.perf_counter()
-    model = falkon_bless_fit(jax.random.PRNGKey(1), kern, x, y, lam_bless=1e-3,
-                             lam_falkon=1e-5, iters=20, m_cap=400, backend=backend)
+    est = FalkonRegressor(kernel=kern, sampler=BlessSampler(lam=1e-3, m_cap=400),
+                          config=FitConfig(lam=1e-5, iters=20, backend=backend))
+    est.fit(x, y, key=jax.random.PRNGKey(1))
+    model = est.model_
     print(f"FALKON-BLESS fit: M = {model.centers.shape[0]} centers "
           f"in {time.perf_counter() - t0:.1f}s (backend={model.backend.name})")
 
     # --- bursty traffic: variable-size requests from the same distribution --
-    server = KrrServer(model, backend=backend, max_wave=2048, min_bucket=64)
+    # (KrrServer accepts the fitted estimator directly)
+    server = KrrServer(est, backend=backend, max_wave=2048, min_bucket=64)
     kq = jax.random.PRNGKey(2)
     sizes = [int(s) for s in jax.random.randint(kq, (args.requests,), 1, 65)]
     reqs = []

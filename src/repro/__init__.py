@@ -1,6 +1,7 @@
 """repro — BLESS / FALKON-BLESS (NeurIPS 2018) as a production JAX framework.
 
-Layers: core (the paper), kernels (Pallas TPU hot-spots), models+configs
+Layers: api (the public front door: Sampler/Estimator objects + kernel-family
+registry), core (the paper), kernels (Pallas TPU hot-spots), models+configs
 (assigned architecture zoo), data/optim/training/serving/checkpoint/runtime
 (substrates), sharding+launch (512-chip SPMD distribution + dry-run).
 """

@@ -1,0 +1,58 @@
+"""``repro.api`` — the single public front door.
+
+The paper's pipeline is two pluggable stages; this package makes each a
+first-class slot:
+
+  * **Samplers** (Alg. 1/2 + baselines + oracle) — anything implementing
+    ``Sampler.sample(key, x, kernel, *, backend=None) -> CenterSet``.
+  * **Estimators** — ``FalkonRegressor`` (Sec. 3 CG), ``NystromRegressor``
+    (Def. 4 direct), ``ExactKrr`` (Eq. 12 oracle), all sklearn-style
+    ``fit(X, y) -> self`` / ``predict`` / ``score`` with multi-output ``y``
+    and warm-start refits on the fused-fit cache.
+  * **Kernel families** — the extensible registry behind ``Kernel``:
+    gaussian / laplacian / linear / matern32 / cauchy built in, each running
+    on all three backends (jnp / Pallas / shard_map) from one definition
+    (``register_kernel_family``; recipe in DESIGN.md §7).
+  * **Serving** — ``KrrServer`` micro-batches prediction traffic over a
+    fitted estimator or model.
+
+    from repro.api import BlessSampler, FalkonRegressor, FitConfig
+
+    est = FalkonRegressor(kernel="matern32", sigma=2.0,
+                          sampler=BlessSampler(lam=1e-3, m_cap=400),
+                          config=FitConfig(lam=1e-5, iters=20))
+    est.fit(x, y)
+    yhat = est.predict(x_test)
+
+Everything here is re-exported from the implementing modules; ``__all__``
+is the supported surface (guarded by tests/test_api.py — no core internals
+leak through this namespace).
+"""
+from ..core.gram import Kernel, make_kernel
+from ..core.leverage import CenterSet
+from ..families import KernelFamily, kernel_family_names, register_kernel_family
+from ..serving.krr import KrrServer
+from .estimators import ExactKrr, FalkonRegressor, FitConfig, NystromRegressor
+from .samplers import (
+    BlessRSampler,
+    BlessSampler,
+    ExactRlsSampler,
+    RecursiveRlsSampler,
+    Sampler,
+    SqueakSampler,
+    TwoPassSampler,
+    UniformSampler,
+)
+
+__all__ = [
+    # samplers (slot 1)
+    "Sampler", "BlessSampler", "BlessRSampler", "UniformSampler",
+    "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
+    # estimators (slot 2)
+    "FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr",
+    # kernel families
+    "Kernel", "make_kernel", "KernelFamily", "register_kernel_family",
+    "kernel_family_names",
+    # shared data type + serving
+    "CenterSet", "KrrServer",
+]

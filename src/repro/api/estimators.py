@@ -1,0 +1,180 @@
+"""sklearn-style estimators over the paper's solvers — the second slot.
+
+Every estimator follows the same contract:
+
+    est = FalkonRegressor(sampler=BlessSampler(lam=1e-3), kernel="gaussian",
+                          config=FitConfig(lam=1e-5, iters=20, backend="jnp"))
+    est.fit(X, y)          # -> est  (learned attrs get a trailing underscore)
+    est.predict(X)         # (n,) or (n, k), through the backend seam
+    est.score(X, y)        # R^2 (uniform average over outputs)
+
+``FitConfig`` is a frozen dataclass so a configuration is hashable and
+shareable; the estimator itself is mutable sklearn-style (swap ``.config``
+between fits for a lambda sweep). ``y`` may be (n,) or (n, k): multi-output
+targets solve one system per column against the shared centers.
+
+Warm starts: with ``warm_start=True`` a refit on same-shaped X reuses the
+previously sampled centers, so consecutive ``fit`` calls ride the PR 2
+fused-fit jit cache — same shape bucket, zero recompiles, one fused dispatch
+per refit (lam and the kernel bandwidth are traced, so sweeping them is free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.falkon import FalkonModel, falkon_fit
+from ..core.gram import BackendLike, Kernel, make_kernel
+from ..core.leverage import CenterSet
+from ..core.nystrom import exact_krr, nystrom_krr
+from .samplers import BlessSampler, Sampler
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Solver configuration shared by every estimator.
+
+    Attributes:
+      lam: the solver's ridge regularization (the paper's lambda; keep it
+        well below a BLESS sampler's own lam — Sec. 4).
+      iters: CG iteration count (FALKON only; the direct solvers ignore it).
+      backend: kernel-operator backend spec — instance, registry name
+        ("jnp" | "pallas" | "sharded"), or None for the platform heuristic.
+      seed: PRNG seed for the sampler when ``fit`` is not given a key.
+    """
+
+    lam: float = 1e-3
+    iters: int = 20
+    backend: BackendLike = None
+    seed: int = 0
+
+
+def _as_kernel(kernel: Kernel | str, sigma: float) -> Kernel:
+    return kernel if isinstance(kernel, Kernel) else make_kernel(kernel, sigma=sigma)
+
+
+class _KrrEstimator:
+    """Shared fit bookkeeping + predict/score for the three estimators."""
+
+    def __init__(self, kernel: Kernel | str = "gaussian", *, sigma: float = 1.0,
+                 config: FitConfig | None = None):
+        self.kernel = _as_kernel(kernel, sigma)
+        self.config = config if config is not None else FitConfig()
+        self.model_: FalkonModel | None = None
+
+    # -- sklearn surface -----------------------------------------------------
+
+    def predict(self, x: Array) -> Array:
+        """Predictions through the kernel-operator seam ((n,) or (n, k))."""
+        if self.model_ is None:
+            raise RuntimeError(f"{type(self).__name__} is not fitted; call .fit first")
+        return self.model_.predict(jnp.asarray(x), backend=self.config.backend)
+
+    def score(self, x: Array, y: Array) -> float:
+        """Coefficient of determination R^2 (uniform average over outputs)."""
+        y = jnp.asarray(y)
+        pred = self.predict(x)
+        if y.shape != pred.shape:  # e.g. (n, 1) targets on a (n,) model:
+            raise ValueError(       # broadcasting would yield a garbage R^2
+                f"y has shape {y.shape} but the model predicts {pred.shape}")
+        res = jnp.sum((y - pred) ** 2, axis=0)
+        tot = jnp.maximum(jnp.sum((y - jnp.mean(y, axis=0)) ** 2, axis=0), 1e-30)
+        return float(jnp.mean(1.0 - res / tot))
+
+    def _key(self, key: Array | None) -> Array:
+        return jax.random.PRNGKey(self.config.seed) if key is None else key
+
+
+class FalkonRegressor(_KrrEstimator):
+    """FALKON (Sec. 3) with a pluggable center sampler.
+
+    ``sampler`` fills the pipeline's first slot (defaults to ``BlessSampler``,
+    i.e. FALKON-BLESS); the sampled ``CenterSet``'s weights become the
+    generalized preconditioner's A (Def. 2). ``warm_start=True`` keeps the
+    sampled centers across refits on same-shaped X (see module docstring).
+    """
+
+    def __init__(self, kernel: Kernel | str = "gaussian", *,
+                 sampler: Sampler | None = None, sigma: float = 1.0,
+                 config: FitConfig | None = None, warm_start: bool = False):
+        super().__init__(kernel, sigma=sigma, config=config)
+        self.sampler = sampler if sampler is not None else BlessSampler()
+        self.warm_start = warm_start
+        self.centers_: Array | None = None
+        self.a_diag_: Array | None = None
+        self.center_set_: CenterSet | None = None
+        self._fit_shape_: tuple | None = None
+
+    def fit(self, x: Array, y: Array, *, key: Array | None = None,
+            center_set: CenterSet | None = None,
+            callback: Callable[[int, FalkonModel], None] | None = None) -> "FalkonRegressor":
+        """Sample centers (unless warm-starting) and solve by preconditioned
+        CG. ``center_set`` bypasses the sampler with a precomputed (J, A)
+        (e.g. one BLESS ladder shared across estimators); ``callback(i,
+        model)`` switches to the host CG loop for per-iteration metrics
+        (single-output only)."""
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        cfg = self.config
+        # warm start contract (sklearn-style): the caller asserts X is the
+        # same training set as the previous fit. The guard can only check
+        # shape — a different dataset with identical (n, d) is on the
+        # caller; pass center_set= (or leave warm_start off) when rotating
+        # datasets, e.g. cross-validation folds.
+        reuse = (center_set is None and self.warm_start
+                 and self.centers_ is not None
+                 and self._fit_shape_ == x.shape)
+        if not reuse:
+            cs = center_set if center_set is not None else self.sampler.sample(
+                self._key(key), x, self.kernel, backend=cfg.backend)
+            m = int(cs.count)
+            self.center_set_ = cs
+            self.centers_ = x[cs.idx[:m]]
+            self.a_diag_ = cs.weight[:m]
+            self._fit_shape_ = x.shape
+        self.model_ = falkon_fit(self.kernel, x, y, self.centers_, cfg.lam,
+                                 a_diag=self.a_diag_, iters=cfg.iters,
+                                 backend=cfg.backend, callback=callback)
+        return self
+
+
+class NystromRegressor(_KrrEstimator):
+    """Direct Nystrom-KRR (Def. 4) on sampled centers — the O(n M^2) dense
+    solve FALKON's CG converges to; same sampler slot, no iteration knob."""
+
+    def __init__(self, kernel: Kernel | str = "gaussian", *,
+                 sampler: Sampler | None = None, sigma: float = 1.0,
+                 config: FitConfig | None = None):
+        super().__init__(kernel, sigma=sigma, config=config)
+        self.sampler = sampler if sampler is not None else BlessSampler()
+        self.centers_: Array | None = None
+        self.center_set_: CenterSet | None = None
+
+    def fit(self, x: Array, y: Array, *, key: Array | None = None) -> "NystromRegressor":
+        x = jnp.asarray(x)
+        cs = self.sampler.sample(self._key(key), x, self.kernel,
+                                 backend=self.config.backend)
+        m = int(cs.count)
+        self.center_set_ = cs
+        self.centers_ = x[cs.idx[:m]]
+        self.model_ = nystrom_krr(self.kernel, x, jnp.asarray(y), self.centers_,
+                                  self.config.lam, backend=self.config.backend)
+        return self
+
+
+class ExactKrr(_KrrEstimator):
+    """Exact kernel ridge regression (Eq. 12) — the O(n^3) oracle. No
+    sampler slot: every training point is a center."""
+
+    def fit(self, x: Array, y: Array, *, key: Array | None = None) -> "ExactKrr":
+        self.model_ = exact_krr(self.kernel, jnp.asarray(x), jnp.asarray(y),
+                                self.config.lam, backend=self.config.backend)
+        return self
+
+
+__all__ = ["FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr"]

@@ -1,0 +1,201 @@
+"""Composable leverage-score samplers — the first slot of the paper's pipeline.
+
+The paper's algorithm is two pluggable stages: a sampler producing a weighted
+Nystrom center set (J, A) and a solver consuming it. Every sampler here
+implements one protocol:
+
+    sample(key, x, kernel, *, backend=None) -> CenterSet
+
+so BLESS (Alg. 1), BLESS-R (Alg. 2), the Sec. 2.3 baselines and the exact
+oracle are drop-in interchangeable inside ``FalkonRegressor`` /
+``NystromRegressor`` — swap the sampler, keep everything else. All heavy work
+routes through the kernel-operator ``Backend`` seam, so any sampler runs on
+jnp / Pallas / shard_map unchanged.
+
+Samplers are frozen dataclasses: hashable, comparable by configuration, and
+safe to share across estimators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.baselines import recursive_rls, squeak, two_pass
+from ..core.bless import BlessResult, _multinomial, _pow2, bless, bless_r
+from ..core.gram import BackendLike, Kernel
+from ..core.leverage import CenterSet, exact_rls, uniform_center_set
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Sampler(Protocol):
+    """Anything that maps (key, data, kernel) to a weighted center set."""
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        """Return (J, A) as a padded ``CenterSet`` (idx/weight/mask/count)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BlessSampler:
+    """BLESS (paper Alg. 1): bottom-up ladder, sampling with replacement.
+
+    Parameters mirror ``repro.core.bless.bless``; ``lam`` is the sampler's
+    own regularization scale — keep it well above the solver's lam (the
+    paper's lam_bless >> lam_falkon trick, Sec. 4).
+    """
+
+    lam: float = 1e-3
+    q: float = 2.0
+    q1: float = 3.0
+    q2: float = 3.0
+    lam0: float | None = None
+    t: float = 1.0
+    m_cap: int | None = None
+
+    def ladder(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> BlessResult:
+        """The full regularization path (every BlessLevel), for introspection."""
+        return bless(key, x, kernel, self.lam, q=self.q, q1=self.q1, q2=self.q2,
+                     lam0=self.lam0, t=self.t, m_cap=self.m_cap, backend=backend)
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        return self.ladder(key, x, kernel, backend=backend).final.centers
+
+
+@dataclasses.dataclass(frozen=True)
+class BlessRSampler:
+    """BLESS-R (paper Alg. 2): rejection sampling, without replacement."""
+
+    lam: float = 1e-3
+    q: float = 2.0
+    q2: float = 3.0
+    lam0: float | None = None
+    t: float = 1.0
+    m_cap: int | None = None
+
+    def ladder(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> BlessResult:
+        return bless_r(key, x, kernel, self.lam, q=self.q, q2=self.q2,
+                       lam0=self.lam0, t=self.t, m_cap=self.m_cap, backend=backend)
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        return self.ladder(key, x, kernel, backend=backend).final.centers
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler:
+    """Uniform column sampling [5] — the fastest, highest-variance baseline.
+
+    ``weights="nystrom"`` sets A = (M/n) I (the Eq. 3 scoring convention of
+    ``uniform_center_set``); ``weights="identity"`` sets A = I (the classic
+    FALKON-uniform preconditioner of the paper's experiments). ``replace``
+    switches between i.i.d. draws and a without-replacement choice.
+    """
+
+    m: int
+    weights: str = "nystrom"  # "nystrom" (A = M/n I) | "identity" (A = I)
+    replace: bool = True
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        if self.weights not in ("nystrom", "identity"):
+            raise ValueError(f"weights must be 'nystrom' or 'identity', got {self.weights!r}")
+        n = x.shape[0]
+        if self.replace:
+            idx = jax.random.randint(key, (self.m,), 0, n)
+        else:
+            idx = jax.random.choice(key, n, (self.m,), replace=False)
+        cs = uniform_center_set(idx, n, _pow2(self.m))  # owns the padding rules
+        if self.weights == "identity":
+            cs = cs._replace(weight=jnp.ones_like(cs.weight))
+        return cs
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactRlsSampler:
+    """The O(n^3) oracle: M i.i.d. draws from the *exact* ridge leverage
+    score distribution (Eq. 1) — the gold standard every approximate sampler
+    is measured against. Weights follow the Alg. 1 line-10 convention with
+    the candidate set = [n]: A = M diag(p_{j_1}, ..., p_{j_M})."""
+
+    m: int
+    lam: float = 1e-3
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        scores = exact_rls(kernel, x, self.lam)
+        p = scores / jnp.sum(scores)
+        mbuf = _pow2(self.m)
+        pos = _multinomial(key, p, mbuf)
+        mask = jnp.arange(mbuf) < self.m
+        return CenterSet(
+            idx=pos.astype(jnp.int32),
+            weight=jnp.where(mask, self.m * p[pos], 1.0).astype(jnp.float32),
+            mask=mask,
+            count=jnp.asarray(self.m, jnp.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Related-work samplers (Sec. 2.3 baselines) — the drop-in alternatives the
+# slot structure exists for: Musco & Musco's RECURSIVE-RLS [9], SQUEAK [8],
+# and El Alaoui & Mahoney's two-pass [6], each wrapped over repro.core.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecursiveRlsSampler:
+    """RECURSIVE-RLS [9] (Musco & Musco) as a drop-in Sampler."""
+
+    lam: float = 1e-3
+    q2: float = 2.0
+    depth: int | None = None
+    m_cap: int | None = None
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        return recursive_rls(key, x, kernel, self.lam, q2=self.q2,
+                             depth=self.depth, m_cap=self.m_cap, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class SqueakSampler:
+    """SQUEAK [8] (Calandriello, Lazaric & Valko) as a drop-in Sampler."""
+
+    lam: float = 1e-3
+    qbar: float = 2.0
+    n_chunks: int | None = None
+    m_cap: int | None = None
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        return squeak(key, x, kernel, self.lam, qbar=self.qbar,
+                      n_chunks=self.n_chunks, m_cap=self.m_cap, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPassSampler:
+    """Two-pass sampling [6] (El Alaoui & Mahoney) as a drop-in Sampler."""
+
+    lam: float = 1e-3
+    m2: int = 256
+    m1: int | None = None
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        return two_pass(key, x, kernel, self.lam, m1=self.m1, m2=self.m2,
+                        backend=backend)
+
+
+__all__ = [
+    "Sampler", "BlessSampler", "BlessRSampler", "UniformSampler",
+    "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
+]

@@ -1,14 +1,21 @@
 """Core paper contribution: BLESS / BLESS-R leverage score sampling and the
 FALKON-BLESS kernel ridge regression solver, plus the baselines they are
 measured against. All hot contractions go through the kernel-operator
-``Backend`` seam (jnp / Pallas / shard_map) in ``repro.core.backend``."""
+``Backend`` seam (jnp / Pallas / shard_map) in ``repro.core.backend``.
+
+The composable public surface (Sampler / Estimator objects, kernel-family
+registry) lives one level up in ``repro.api``; this package remains the
+implementation layer those objects delegate to."""
 from .gram import (
     Kernel,
+    KernelFamily,
     make_kernel,
     blocked_cross,
     sq_dists,
     backend_names,
+    kernel_family_names,
     register_backend,
+    register_kernel_family,
     resolve_backend,
 )
 from .backend import (
@@ -41,7 +48,8 @@ from .falkon import (
 from .nystrom import exact_krr, nystrom_krr
 
 __all__ = [
-    "Kernel", "make_kernel", "blocked_cross", "sq_dists",
+    "Kernel", "KernelFamily", "make_kernel", "blocked_cross", "sq_dists",
+    "kernel_family_names", "register_kernel_family",
     "Backend", "JnpBackend", "PallasBackend", "ShardedBackend",
     "backend_names", "default_backend", "register_backend", "resolve_backend",
     "CenterSet", "approx_rls", "approx_rls_all", "effective_dim", "exact_rls",

@@ -42,7 +42,8 @@ from jax.experimental.shard_map import shard_map
 from ..kernels.falkon_matvec import ops as falkon_ops
 from ..kernels.gram import ops as gram_ops
 from ..kernels.quadform import ops as quadform_ops
-from .gram import Kernel, blocked_cross, register_backend
+from .gram import (Kernel, blocked_cross, get_family, kernel_family_names,
+                   register_backend)
 from .leverage import _chol_with_jitter
 
 Array = jax.Array
@@ -77,13 +78,18 @@ def _pick(table, size: int):
 
 def _kernel_params(kernel: Kernel) -> tuple[str, float]:
     """(kind, sigma) for the Pallas wrappers; sigma must be concrete here
-    because the kernels bake 1/sigma into the compiled epilogue."""
+    because the kernels bake the family's inv_scale into the compiled
+    epilogue. The family itself is resolved from the ``repro.families``
+    registry — an unknown name raises with every registered family listed,
+    not a hard-coded subset."""
+    get_family(kernel.name)  # enumerates the registry on typos
     try:
         return kernel.name, float(kernel.sigma)
     except (TypeError, jax.errors.ConcretizationTypeError) as e:
         raise ValueError(
-            "PallasBackend needs a concrete kernel bandwidth; call it outside "
-            "jit (the core entry points already do)"
+            f"PallasBackend needs a concrete kernel bandwidth for the "
+            f"{kernel.name!r} family (registered: {kernel_family_names()}); "
+            "call it outside jit (the core entry points already do)"
         ) from e
 
 

@@ -255,21 +255,39 @@ def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
 # FALKON estimator
 # ---------------------------------------------------------------------------
 
+#: Multi-output predict materializes the (n, M) Gram block only below this
+#: element count (16M fp32 = 64 MB); larger batches stream per column.
+_PREDICT_GRAM_ELEMS = 1 << 24
+
 
 @dataclasses.dataclass(frozen=True)
 class FalkonModel:
     centers: Array  # (M, d)
-    alpha: Array  # (M,)
+    alpha: Array  # (M,) or (M, k) for multi-output fits
     kernel: Kernel
     #: serving-time contraction backend; set by falkon_fit to the fit-time
     #: choice, overridable per predict call. None -> platform heuristic.
     backend: BackendLike = None
 
     def predict(self, x: Array, *, backend: BackendLike = None) -> Array:
-        """K(x, centers) alpha through the kernel-operator seam."""
+        """K(x, centers) alpha through the kernel-operator seam.
+
+        Returns (n,) for a single-output model, (n, k) for a multi-output
+        one. Single-output takes the fused ``knm_matvec`` (K_nM never
+        materialized). Multi-output pays one kernel evaluation regardless of
+        k when the (n, M) Gram block fits a bounded intermediate (one
+        ``gram_block`` + matmul — always the case for ``KrrServer`` waves);
+        past that bound it falls back to k fused ``knm_matvec`` calls so a
+        huge offline batch streams instead of materializing n*M floats.
+        """
         spec = backend if backend is not None else self.backend
         be = resolve_backend(spec, n=x.shape[0])
-        return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
+        if self.alpha.ndim == 1:
+            return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
+        if x.shape[0] * self.centers.shape[0] <= _PREDICT_GRAM_ELEMS:
+            return be.gram_block(self.kernel, x, self.centers) @ self.alpha
+        return jnp.stack([be.knm_matvec(self.kernel, x, self.centers, self.alpha[:, j])
+                          for j in range(self.alpha.shape[1])], axis=1)
 
 
 def falkon_fit(
@@ -295,10 +313,27 @@ def falkon_fit(
     None (default) takes it automatically when the backend is jit-safe and no
     ``callback`` needs the host CG loop; True forces it (raising if the
     backend cannot be traced); False forces the host-driven path.
+
+    ``y`` may be (n,) or (n, k): multi-output targets solve one CG per
+    column against the same centers. The columns share one *compile* (every
+    column after the first hits the fused cache on the identical shape
+    bucket) but are otherwise independent full solves — each re-derives the
+    preconditioner and re-streams K_nM. Batching the right-hand sides
+    through a multi-RHS CG is an open perf item (ROADMAP).
     """
     n = x.shape[0]
     m = centers.shape[0]
     backend = resolve_backend(backend, n=n)
+    if y.ndim == 2:
+        if callback is not None:
+            raise ValueError("per-iteration callback is single-output only; "
+                             "fit columns separately to trace them")
+        cols = [falkon_fit(kernel, x, y[:, j], centers, lam, a_diag=a_diag,
+                           iters=iters, backend=backend, fused=fused)
+                for j in range(y.shape[1])]
+        return FalkonModel(centers=centers,
+                           alpha=jnp.stack([c.alpha for c in cols], axis=1),
+                           kernel=kernel, backend=backend)
     a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
     if fused is None:
         fused = backend.jit_safe and callback is None
@@ -342,15 +377,22 @@ def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: 
                      lam_falkon: float, *, iters: int = 20, q2: float = 3.0,
                      m_cap: int | None = None, backend: BackendLike = None,
                      callback=None) -> FalkonModel:
-    """FALKON-BLESS end-to-end: BLESS centers/weights at lam_bless, CG at
-    lam_falkon (the paper's lam_bless >> lam_falkon trick, Sec. 4)."""
-    from .bless import bless
+    """FALKON-BLESS end-to-end (the paper's lam_bless >> lam_falkon trick,
+    Sec. 4). Thin shim over the ``repro.api`` front door — equivalent to
+    ``FalkonRegressor(sampler=BlessSampler(lam=lam_bless, ...))`` — kept for
+    source compatibility; tests/test_api.py proves the paths bit-identical.
 
-    backend = resolve_backend(backend, n=x.shape[0])
-    res = bless(key, x, kernel, lam_bless, q2=q2, m_cap=m_cap, backend=backend)
-    lvl = res.final
-    m = lvl.m_h
-    idx = lvl.centers.idx[:m]
-    a = lvl.centers.weight[:m]
-    return falkon_fit(kernel, x, y, x[idx], lam_falkon, a_diag=a, iters=iters,
-                      backend=backend, callback=callback)
+    The upward delegation is deliberate: the sampler+solver *composition*
+    has exactly one implementation (the estimator), so shim and front door
+    cannot drift. The import is lazy/call-time, keeping module import order
+    acyclic (api imports core at module scope, never the reverse).
+    """
+    from ..api.estimators import FalkonRegressor, FitConfig  # api sits above core
+    from ..api.samplers import BlessSampler
+
+    est = FalkonRegressor(
+        kernel=kernel,
+        sampler=BlessSampler(lam=lam_bless, q2=q2, m_cap=m_cap),
+        config=FitConfig(lam=lam_falkon, iters=iters, backend=backend),
+    )
+    return est.fit(x, y, key=key, callback=callback).model_

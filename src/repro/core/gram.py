@@ -2,7 +2,10 @@
 
 The paper works with a bounded PSD kernel ``K(x, x') <= kappa^2`` (Eq. 17).
 ``Kernel`` is a tiny pytree so jitted core functions retrace only when the
-kernel *family* changes, not when its bandwidth does.
+kernel *family* changes, not when its bandwidth does. Families themselves
+live in the extensible registry ``repro.families`` (re-exported here):
+each ``KernelFamily`` contributes the jnp formula *and* the Pallas tile
+epilogue, so a registered family runs on all three backends.
 
 The blockwise entry points here are the pure-jnp reference path; the same
 contractions are served by the Pallas kernels (``repro.kernels.gram`` /
@@ -21,6 +24,13 @@ from typing import TYPE_CHECKING, Callable, Union
 import jax
 import jax.numpy as jnp
 
+from ..families import (  # noqa: F401 — re-exported public API
+    KernelFamily,
+    get_family,
+    kernel_family_names,
+    register_kernel_family,
+)
+
 if TYPE_CHECKING:  # pragma: no cover — type-only, avoids the import cycle
     from .backend import Backend
 
@@ -33,10 +43,12 @@ class Kernel:
     """A bounded positive-definite kernel ``k(x, z)``.
 
     Attributes:
-      name: kernel family ("gaussian" | "laplacian" | "linear").
-      sigma: bandwidth (ignored for "linear").
-      kappa_sq: uniform bound on ``k(x, x)`` (1.0 for the exponential families;
-        must be supplied for "linear" if inputs are not normalized).
+      name: kernel family, resolved from the ``repro.families`` registry
+        (``kernel_family_names()`` enumerates what is available; gaussian,
+        laplacian, linear, matern32 and cauchy ship built in).
+      sigma: bandwidth (ignored by bandwidth-free families, e.g. "linear").
+      kappa_sq: uniform bound on ``k(x, x)`` (1.0 for the unit-diagonal
+        families; must be supplied for "linear" if inputs are not normalized).
     """
 
     name: str = "gaussian"
@@ -52,23 +64,26 @@ class Kernel:
         name, kappa_sq = aux
         return cls(name=name, sigma=children[0], kappa_sq=kappa_sq)
 
+    @property
+    def family(self) -> KernelFamily:
+        """The registered family (raises with the registry listed on typos)."""
+        return get_family(self.name)
+
     # -- API -----------------------------------------------------------------
     def cross(self, x: jax.Array, z: jax.Array) -> jax.Array:
         """Gram block ``k(x_i, z_j)`` of shape (n, m)."""
-        if self.name == "gaussian":
-            return jnp.exp(-sq_dists(x, z) / (2.0 * self.sigma**2))
-        if self.name == "laplacian":
-            d = jnp.sqrt(jnp.maximum(sq_dists(x, z), 1e-30))
-            return jnp.exp(-d / self.sigma)
-        if self.name == "linear":
-            return x @ z.T
-        raise ValueError(f"unknown kernel {self.name!r}")
+        fam = self.family
+        if fam.dot_only:
+            return fam.epilogue(x @ z.T, fam.inv_scale(self.sigma))
+        return fam.epilogue(sq_dists(x, z), fam.inv_scale(self.sigma))
 
     def diag(self, x: jax.Array) -> jax.Array:
         """``k(x_i, x_i)`` of shape (n,)."""
-        if self.name in ("gaussian", "laplacian"):
+        fam = self.family
+        if fam.unit_diag:
             return jnp.ones((x.shape[0],), x.dtype)
-        return jnp.sum(x * x, axis=-1)
+        pre = jnp.sum(x * x, axis=-1) if fam.dot_only else jnp.zeros((x.shape[0],), x.dtype)
+        return fam.epilogue(pre, fam.inv_scale(self.sigma))
 
     def gram(self, x: jax.Array) -> jax.Array:
         return self.cross(x, x)
@@ -87,6 +102,7 @@ def sq_dists(x: jax.Array, z: jax.Array) -> jax.Array:
 
 
 def make_kernel(name: str = "gaussian", sigma: float = 1.0, kappa_sq: float = 1.0) -> Kernel:
+    get_family(name)  # fail fast with the registered families enumerated
     return Kernel(name=name, sigma=sigma, kappa_sq=kappa_sq)
 
 

@@ -23,17 +23,22 @@ Array = jax.Array
 
 def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float,
                 *, backend: BackendLike = None) -> FalkonModel:
+    """Def. 4 direct solve; ``y`` may be (n,) or (n, k) (multi-output shares
+    the factorization — only the K_nM^T y right-hand sides differ)."""
     n = x.shape[0]
     be = resolve_backend(backend, n=n)
     knm = be.gram_block(kernel, x, centers)
     kmm = be.gram_block(kernel, centers, centers)
     h = knm.T @ knm + lam * n * kmm
-    alpha = _psd_solve(h, be.knm_t(kernel, x, centers, y))
+    # knm is already materialized: K_nM^T y is one matmul on it, exact for
+    # (n,) and (n, k) alike — no second pass over the kernel evaluations.
+    alpha = _psd_solve(h, knm.T @ y)
     return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=be)
 
 
 def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float,
               *, backend: BackendLike = None) -> FalkonModel:
+    """Eq. 12 exact solve; multi-output ``y`` (n, k) rides the same Cholesky."""
     n = x.shape[0]
     be = resolve_backend(backend, n=n)
     k = be.gram_block(kernel, x, x)

@@ -1,0 +1,135 @@
+"""Kernel-family registry — one definition per family, shared by every path.
+
+A ``KernelFamily`` owns the two pieces every execution path needs:
+
+  * ``inv_scale``  — folds the bandwidth into the scalar the epilogue
+    consumes (jnp-traceable for the jitted reference path; the Pallas
+    wrappers call it with a concrete sigma and bake the float into the
+    compiled kernel).
+  * ``epilogue``   — the elementwise map from the MXU pre-activation to
+    kernel values. For distance families the pre-activation is the clamped
+    squared distance ``d2 >= 0``; for dot-product families (``dot_only``)
+    it is the raw inner product ``x . z``. The same function body runs as
+    the pure-jnp formula (``Kernel.cross``, the kernel refs) *and* as the
+    VPU epilogue inside the Pallas tiles (``kernels/gram``,
+    ``kernels/falkon_matvec``) — registering a family here makes it work
+    on all three backends (jnp / Pallas / shard_map) at once.
+
+This module is a deliberate leaf (imports nothing from ``repro``): it sits
+below both ``repro.core`` and ``repro.kernels`` so neither import direction
+creates a cycle. The public access points are re-exported from
+``repro.core.gram`` and ``repro.api``.
+
+Extension recipe (DESIGN.md §7): build a ``KernelFamily`` whose ``epilogue``
+uses only elementwise jnp ops (VPU-safe inside a Pallas tile) and call
+``register_kernel_family``. Nothing else needs editing — ``Kernel``, the
+Pallas wrappers, and the shard_map path all resolve families by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFamily:
+    """One kernel family k(x, z) = epilogue(pre, inv_scale(sigma)).
+
+    Attributes:
+      name: registry key ("gaussian", "matern32", ...).
+      inv_scale: sigma -> the scalar folded into the epilogue. Must be plain
+        arithmetic (traceable when sigma is a tracer on the jnp path).
+      epilogue: (pre, inv_scale) -> kernel values, elementwise only (it runs
+        on the VPU inside Pallas tiles). ``pre`` is the squared distance
+        (clamped at 0) unless ``dot_only``, then the raw inner product.
+      dot_only: family is a function of x . z (no distance epilogue); the
+        Pallas kernels then skip the norm computation entirely.
+      unit_diag: k(x, x) == 1 for all x (true for the distance families with
+        epilogue(0) == 1; lets ``Kernel.diag`` return ones without compute).
+    """
+
+    name: str
+    inv_scale: Callable[[jax.typing.ArrayLike], jax.typing.ArrayLike]
+    epilogue: Callable[[Array, jax.typing.ArrayLike], Array]
+    dot_only: bool = False
+    unit_diag: bool = True
+
+
+_FAMILY_REGISTRY: dict[str, KernelFamily] = {}
+
+
+def register_kernel_family(family: KernelFamily, *, overwrite: bool = False) -> KernelFamily:
+    """Register a family for resolution by name everywhere (jnp + Pallas +
+    shard_map). Returns the family so definitions can be one expression."""
+    if not overwrite and family.name in _FAMILY_REGISTRY:
+        raise ValueError(f"kernel family {family.name!r} is already registered; "
+                         "pass overwrite=True to replace it")
+    _FAMILY_REGISTRY[family.name] = family
+    return family
+
+
+def kernel_family_names() -> list[str]:
+    """Sorted names of every registered kernel family."""
+    return sorted(_FAMILY_REGISTRY)
+
+
+def get_family(name: str) -> KernelFamily:
+    """Resolve a family by name; error messages enumerate the registry."""
+    try:
+        return _FAMILY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel family {name!r}; registered: {kernel_family_names()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Built-in families. Epilogues are elementwise-only by contract; the +1e-30
+# under the sqrt keeps the laplacian/matern gradient finite at d2 == 0 and is
+# the single formula both the jnp reference and the Pallas tiles use (so
+# cross-backend parity is exact up to fp reassociation).
+# ---------------------------------------------------------------------------
+
+GAUSSIAN = register_kernel_family(KernelFamily(
+    name="gaussian",
+    inv_scale=lambda sigma: 1.0 / (2.0 * sigma**2),
+    epilogue=lambda d2, s: jnp.exp(-d2 * s),
+))
+
+LAPLACIAN = register_kernel_family(KernelFamily(
+    name="laplacian",
+    inv_scale=lambda sigma: 1.0 / sigma,
+    epilogue=lambda d2, s: jnp.exp(-jnp.sqrt(d2 + 1e-30) * s),
+))
+
+LINEAR = register_kernel_family(KernelFamily(
+    name="linear",
+    inv_scale=lambda sigma: 1.0,  # bandwidth-free
+    epilogue=lambda prod, s: prod,
+    dot_only=True,
+    unit_diag=False,
+))
+
+#: Matern-3/2: (1 + r) e^{-r} with r = sqrt(3) ||x-z|| / sigma — the once-
+#: differentiable middle ground between laplacian (nu=1/2) and gaussian.
+#: NOTE inv_scale stays pure-Python arithmetic (no jnp): it must yield a
+#: Python float for concrete sigma even when *called from inside a trace*
+#: (the Pallas wrappers bake float(inv_scale(sigma)) into the kernel).
+MATERN32 = register_kernel_family(KernelFamily(
+    name="matern32",
+    inv_scale=lambda sigma: 3.0**0.5 / sigma,
+    epilogue=lambda d2, s: (lambda r: (1.0 + r) * jnp.exp(-r))(jnp.sqrt(d2 + 1e-30) * s),
+))
+
+#: Cauchy (rational-quadratic, alpha=1): 1 / (1 + ||x-z||^2 / sigma^2) —
+#: heavy-tailed, no exp on the hot path.
+CAUCHY = register_kernel_family(KernelFamily(
+    name="cauchy",
+    inv_scale=lambda sigma: 1.0 / sigma**2,
+    epilogue=lambda d2, s: 1.0 / (1.0 + d2 * s),
+))

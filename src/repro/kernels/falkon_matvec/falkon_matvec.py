@@ -32,25 +32,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...families import get_family
+
 
 def _gram_tile(x: jax.Array, z: jax.Array, *, kind: str, inv_scale: float,
                bf16: bool) -> jax.Array:
     """k(X_tile, Z) in VMEM; x (bn, d) and z (M, d) are fp32.
 
-    With ``bf16`` the MXU product takes bf16 operands (fp32 accumulation);
-    the norms and epilogue are always fp32 so the only precision loss is the
+    ``kind`` names a registered kernel family; its elementwise epilogue runs
+    here on the VPU (the same function body as the jnp reference). With
+    ``bf16`` the MXU product takes bf16 operands (fp32 accumulation); the
+    norms and epilogue are always fp32 so the only precision loss is the
     cross-term of the squared distance.
     """
+    fam = get_family(kind)
     xc, zc = (x.astype(jnp.bfloat16), z.astype(jnp.bfloat16)) if bf16 else (x, z)
     prod = jax.lax.dot_general(xc, zc, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)  # (bn, M)
-    if kind == "linear":
-        return prod
+    if fam.dot_only:
+        return fam.epilogue(prod, inv_scale)
     d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :]
                      - 2.0 * prod, 0.0)
-    if kind == "gaussian":
-        return jnp.exp(-d2 * inv_scale)
-    return jnp.exp(-jnp.sqrt(d2 + 1e-30) * inv_scale)
+    return fam.epilogue(d2, inv_scale)
 
 
 def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,

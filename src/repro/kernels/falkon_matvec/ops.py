@@ -10,15 +10,16 @@ from __future__ import annotations
 
 import jax
 
+from ...families import get_family
 from ..common import default_interpret, pad_dim, round_up
 from .falkon_matvec import falkon_matvec_pallas, knm_matvec_pallas, knm_t_pallas
 from .ref import falkon_matvec_ref, knm_matvec_ref, knm_t_ref
 
-_INV_SCALE = {"gaussian": lambda s: 1.0 / (2.0 * s**2), "laplacian": lambda s: 1.0 / s}
-
 
 def _inv_scale(kind: str, sigma: float) -> float:
-    return _INV_SCALE.get(kind, lambda s: 1.0)(sigma)
+    """The family's epilogue scalar — resolved from the registry, so every
+    registered family (incl. matern32 / cauchy) flows through unchanged."""
+    return float(get_family(kind).inv_scale(sigma))
 
 
 def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,

@@ -18,8 +18,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...families import get_family
+
 
 def _gram_kernel(x_ref, z_ref, o_ref, *, kind: str, inv_scale: float, bf16: bool):
+    fam = get_family(kind)  # kind is static: resolved once per trace
     x = x_ref[...].astype(jnp.float32)  # (bn, d)
     z = z_ref[...].astype(jnp.float32)  # (bm, d)
     # bf16: MXU operands dropped to bf16, fp32 accumulation; norms/epilogue
@@ -27,19 +30,15 @@ def _gram_kernel(x_ref, z_ref, o_ref, *, kind: str, inv_scale: float, bf16: bool
     xc, zc = (x.astype(jnp.bfloat16), z.astype(jnp.bfloat16)) if bf16 else (x, z)
     prod = jax.lax.dot_general(xc, zc, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)  # (bn, bm) on MXU
-    if kind == "linear":
-        o_ref[...] = prod.astype(o_ref.dtype)
+    if fam.dot_only:
+        o_ref[...] = fam.epilogue(prod, inv_scale).astype(o_ref.dtype)
         return
     xn = jnp.sum(x * x, axis=-1)[:, None]
     zn = jnp.sum(z * z, axis=-1)[None, :]
     d2 = jnp.maximum(xn + zn - 2.0 * prod, 0.0)
-    if kind == "gaussian":
-        out = jnp.exp(-d2 * inv_scale)
-    elif kind == "laplacian":
-        out = jnp.exp(-jnp.sqrt(d2 + 1e-30) * inv_scale)
-    else:
-        raise ValueError(kind)
-    o_ref[...] = out.astype(o_ref.dtype)
+    # the family's elementwise epilogue runs on the VPU while the next tile's
+    # matmul occupies the MXU — same function as the jnp reference formula.
+    o_ref[...] = fam.epilogue(d2, inv_scale).astype(o_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("kind", "bn", "bm", "interpret", "inv_scale", "bf16"))

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...families import get_family
 from ..common import default_interpret, pad_dim, round_up
 from .gram import gram_pallas
 from .ref import gram_ref
@@ -14,16 +15,13 @@ def gram(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussia
          bf16: bool = False) -> jax.Array:
     """k(X, Z) -> (n, m). Arbitrary shapes; pads internally to (bn, bm, 128).
 
-    ``bf16`` drops the MXU operands of the distance cross-term to bf16 with
-    fp32 accumulation (~1e-2 relative tolerance on kernel values for
-    unit-scale data; see DESIGN.md §2).
+    ``kind`` names any registered kernel family (``repro.families``); its
+    ``inv_scale`` is baked into the compiled epilogue here. ``bf16`` drops
+    the MXU operands of the distance cross-term to bf16 with fp32
+    accumulation (~1e-2 relative tolerance on kernel values for unit-scale
+    data; see DESIGN.md §2).
     """
-    if kind == "gaussian":
-        inv_scale = 1.0 / (2.0 * sigma**2)
-    elif kind == "laplacian":
-        inv_scale = 1.0 / sigma
-    else:
-        inv_scale = 1.0
+    inv_scale = float(get_family(kind).inv_scale(sigma))
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -35,5 +33,4 @@ def gram(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussia
 
 
 def gram_reference(x: jax.Array, z: jax.Array, sigma: float = 1.0, *, kind: str = "gaussian") -> jax.Array:
-    inv_scale = {"gaussian": 1.0 / (2.0 * sigma**2), "laplacian": 1.0 / sigma}.get(kind, 1.0)
-    return gram_ref(x, z, inv_scale, kind=kind)
+    return gram_ref(x, z, float(get_family(kind).inv_scale(sigma)), kind=kind)

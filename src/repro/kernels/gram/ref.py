@@ -1,21 +1,20 @@
-"""Pure-jnp oracle for the gram kernel."""
+"""Pure-jnp oracle for the gram kernel — same family epilogues as the tiles."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ...families import get_family
+
 
 def gram_ref(x: jax.Array, z: jax.Array, inv_scale: float, *, kind: str = "gaussian") -> jax.Array:
+    fam = get_family(kind)
     x32 = x.astype(jnp.float32)
     z32 = z.astype(jnp.float32)
-    if kind == "linear":
-        return (x32 @ z32.T).astype(x.dtype)
+    if fam.dot_only:
+        return fam.epilogue(x32 @ z32.T, inv_scale).astype(x.dtype)
     d2 = jnp.maximum(
         jnp.sum(x32 * x32, -1)[:, None] + jnp.sum(z32 * z32, -1)[None, :] - 2.0 * (x32 @ z32.T),
         0.0,
     )
-    if kind == "gaussian":
-        return jnp.exp(-d2 * inv_scale).astype(x.dtype)
-    if kind == "laplacian":
-        return jnp.exp(-jnp.sqrt(d2 + 1e-30) * inv_scale).astype(x.dtype)
-    raise ValueError(kind)
+    return fam.epilogue(d2, inv_scale).astype(x.dtype)

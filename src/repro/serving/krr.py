@@ -13,15 +13,20 @@ through the kernel-operator ``Backend`` seam serves the whole wave. The jit
 cache then holds at most ``log2(max_wave / min_bucket) + 1`` executables per
 model, independent of traffic.
 
-    server = KrrServer(model)
+``model`` accepts either a raw ``FalkonModel`` or any fitted ``repro.api``
+estimator (``FalkonRegressor`` / ``NystromRegressor`` / ``ExactKrr`` — the
+fitted ``model_`` is unwrapped). Multi-output models serve (r, k) blocks per
+request through the same wave packing.
+
+    server = KrrServer(FalkonRegressor(...).fit(x, y))
     rid = server.submit(x_req)        # queue a (r, d) request
-    preds = server.flush()            # {rid: (r,) predictions}
+    preds = server.flush()            # {rid: (r,) or (r, k) predictions}
     server.predict(x)                 # submit + flush convenience
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +47,8 @@ class KrrServer:
     """Micro-batching front end over one FALKON/KRR model.
 
     Attributes:
-      model: the fitted estimator; prediction runs through its backend seam.
+      model: a ``FalkonModel`` or a fitted ``repro.api`` estimator (its
+        ``model_`` is unwrapped); prediction runs through its backend seam.
       backend: per-server override of the model's fit-time backend.
       max_wave: row budget per fused dispatch — requests are packed into
         waves of at most this many rows (a single larger request still goes
@@ -51,7 +57,7 @@ class KrrServer:
         shapes and bounds the bucket count from below.
     """
 
-    model: FalkonModel
+    model: Union[FalkonModel, object]  # object: any fitted repro.api estimator
     backend: BackendLike = None
     max_wave: int = 4096
     min_bucket: int = 64
@@ -59,6 +65,13 @@ class KrrServer:
     def __post_init__(self):
         if self.max_wave < 1 or self.min_bucket < 1:
             raise ValueError("max_wave and min_bucket must be positive")
+        if not hasattr(self.model, "centers"):  # a repro.api estimator
+            inner = getattr(self.model, "model_", None)
+            if inner is None:
+                raise ValueError(
+                    f"{type(self.model).__name__} has no fitted model; "
+                    "call .fit before serving it")
+            self.model = inner
         self.reset()
 
     def reset(self) -> None:

@@ -63,8 +63,11 @@ def test_backends_are_hashable_jit_keys():
 # -- contraction parity ------------------------------------------------------
 
 
+ALL_FAMILIES = ["gaussian", "laplacian", "linear", "matern32", "cauchy"]
+
+
 @pytest.mark.parametrize("name", BACKENDS)
-@pytest.mark.parametrize("kind", ["gaussian", "laplacian", "linear"])
+@pytest.mark.parametrize("kind", ALL_FAMILIES)
 def test_gram_block_parity(name, kind):
     kern = make_kernel(kind, sigma=1.7, kappa_sq=10.0)
     x, _, _ = _problem(n=300)
@@ -73,6 +76,21 @@ def test_gram_block_parity(name, kind):
     z = jax.random.normal(jax.random.PRNGKey(9), (70, x.shape[1]))
     out = resolve_backend(name).gram_block(kern, x, z)
     np.testing.assert_allclose(out, kern.cross(x, z), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("kind", ["matern32", "cauchy"])
+def test_new_family_knm_matvec_parity(name, kind):
+    """The registry's new families drive the predict contraction on every
+    backend from the one KernelFamily definition."""
+    kern = make_kernel(kind, sigma=1.3)
+    x, _, _ = _problem(n=300)
+    z = jax.random.normal(jax.random.PRNGKey(7), (48, x.shape[1]))
+    v = jax.random.normal(jax.random.PRNGKey(5), (48,))
+    ref = kern.cross(x, z) @ v
+    out = resolve_backend(name).knm_matvec(kern, x, z, v)
+    np.testing.assert_allclose(out, ref, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(ref).max()))
 
 
 @pytest.mark.parametrize("name", BACKENDS)
@@ -194,6 +212,29 @@ def test_falkon_predictions_match_jnp(name):
     # per-call override routes the same model through another backend
     po = fk.predict(x, backend="jnp")
     assert float(jnp.max(jnp.abs(po - pr))) < 1e-4, name
+
+
+@pytest.mark.parametrize("name", ["pallas", "sharded"])
+@pytest.mark.parametrize("kind", ["matern32", "cauchy"])
+def test_new_family_falkon_predictions_match_jnp(name, kind):
+    """End-to-end FALKON parity for the registry's new families."""
+    kern = make_kernel(kind, sigma=1.8)
+    x, y, z = _problem(n=300, m=40)
+    ref = falkon_fit(kern, x, y, z, 1e-3, iters=20, backend="jnp")
+    fk = falkon_fit(kern, x, y, z, 1e-3, iters=20, backend=name)
+    assert float(jnp.max(jnp.abs(ref.predict(x) - fk.predict(x)))) < 1e-4
+
+
+def test_unknown_family_error_enumerates_registry():
+    import dataclasses
+
+    from repro.core import kernel_family_names
+
+    bad = dataclasses.replace(make_kernel("gaussian"), name="spectral")
+    with pytest.raises(ValueError, match="registered"):
+        resolve_backend("pallas").gram_block(bad, jnp.zeros((8, 4)), jnp.zeros((8, 4)))
+    assert {"gaussian", "laplacian", "linear", "matern32", "cauchy"} <= set(
+        kernel_family_names())
 
 
 def test_pallas_backend_runs_interpret_explicitly():

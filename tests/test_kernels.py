@@ -17,7 +17,7 @@ def _tol(dtype):
 
 
 @pytest.mark.parametrize("n,m,d", [(256, 256, 128), (300, 130, 17), (64, 512, 64), (1000, 77, 3)])
-@pytest.mark.parametrize("kind", ["gaussian", "laplacian", "linear"])
+@pytest.mark.parametrize("kind", ["gaussian", "laplacian", "linear", "matern32", "cauchy"])
 def test_gram_shapes(n, m, d, kind):
     x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
     z = jax.random.normal(jax.random.PRNGKey(1), (m, d))
@@ -52,6 +52,19 @@ def test_falkon_matvec_shapes(n, m, d, bn):
     v = jax.random.normal(jax.random.PRNGKey(2), (m,))
     out = falkon_matvec(x, z, v, 1.5, interpret=True, bn=bn)
     ref = falkon_matvec_ref(x, z, v, 1.0 / (2 * 1.5**2))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * float(jnp.abs(ref).max()))
+
+
+@pytest.mark.parametrize("kind", ["laplacian", "linear", "matern32", "cauchy"])
+def test_falkon_matvec_all_families(kind):
+    """The fused CG matvec consumes every registered family's epilogue."""
+    from repro.families import get_family
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (300, 12))
+    z = jax.random.normal(jax.random.PRNGKey(1), (70, 12))
+    v = jax.random.normal(jax.random.PRNGKey(2), (70,))
+    out = falkon_matvec(x, z, v, 1.5, kind=kind, interpret=True, bn=256)
+    ref = falkon_matvec_ref(x, z, v, float(get_family(kind).inv_scale(1.5)), kind=kind)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * float(jnp.abs(ref).max()))
 
 

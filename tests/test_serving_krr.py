@@ -98,3 +98,21 @@ def test_reset_clears_queue_and_stats(model):
     assert server.pending_rows == 0
     assert server.flush() == {}
     assert server.stats["requests"] == 0 and server.stats["dispatches"] == 0
+
+
+@pytest.mark.parametrize("name", ["jnp", "pallas", "sharded"])
+def test_multi_output_waves_cross_backend(name):
+    """(n, k) targets: every wave serves (r, k) blocks, exactly matching the
+    direct path, on each kernel-operator backend."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1] ** 2
+    Y = jnp.stack([y, -y, jnp.cos(x[:, 2])], axis=1)
+    m = falkon_fit(KERN, x, Y, x[:48], 1e-3, iters=12, backend=name)
+    server = KrrServer(m, max_wave=128, min_bucket=32)
+    reqs = _requests([(1, 3), (2, 40), (3, 100)])
+    rids = [server.submit(q) for q in reqs]
+    out = server.flush()
+    for rid, q in zip(rids, reqs):
+        assert out[rid].shape == (q.shape[0], 3)
+        np.testing.assert_allclose(out[rid], m.predict(q), rtol=1e-6, atol=1e-6)

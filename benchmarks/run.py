@@ -5,6 +5,8 @@
   bench_table1_complexity     Table 1: |J| ~ d_eff(lam), runtime ~ 1/lam
   bench_fig3_lambda_stability Fig. 3: error across lam_falkon grid
   bench_fig45_falkon          Fig. 4/5: FALKON-BLESS vs FALKON-UNI per iter
+  bench_multi_rhs             multi-RHS block-CG: k outputs / CV folds in
+                              one solve vs the per-column loop
   bench_lm_steps              framework: smoke-scale train/decode step times
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
@@ -29,9 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import (BlessRSampler, BlessSampler, FalkonRegressor, FitConfig,
-                       RecursiveRlsSampler, SqueakSampler, UniformSampler,
-                       make_kernel)
-from repro.core import exact_rls
+                       KFoldSweep, RecursiveRlsSampler, SqueakSampler,
+                       UniformSampler, make_kernel)
+from repro.core import exact_rls, falkon_fit
 from repro.core.leverage import approx_rls_all
 
 _RECORDS: list[dict] = []
@@ -205,6 +207,47 @@ def bench_fig3_lambda_stability(n: int = 2000, m_cap: int = 250, n_test: int = 6
             emit(f"fig3.{tag}.lam{lam:g}", us, f"cerr@5it={err:.4f}")
 
 
+def bench_multi_rhs(n: int = 3000, m: int = 256, k: int = 8, folds: int = 4,
+                    iters: int = 20, backend=None) -> None:
+    """Multi-RHS block-CG amortization: k outputs (or CV folds) share the
+    preconditioner and the K_nM streaming, so fused_k{k} should sit far
+    below k x fused_k1 while loop_k{k} (the pre-PR 4 column loop, the
+    honest baseline) pays the full k x."""
+    x = _data(n)
+    kern = make_kernel("gaussian", sigma=2.0)
+    key = jax.random.PRNGKey(0)
+    cs = UniformSampler(m=m, replace=False, weights="identity").sample(key, x, kern)
+    centers = x[cs.idx[:m]]
+    cols = [jnp.sin((j + 2) * x[:, j % x.shape[1]]) + 0.1 * j for j in range(k)]
+    ymulti = jnp.stack(cols, axis=1)
+    lam = 1e-5
+
+    _, us1 = timed(lambda: falkon_fit(kern, x, ymulti[:, 0], centers, lam,
+                                      iters=iters, backend=backend))
+    emit("multi_rhs.fused_k1", us1, f"n={n};M={m};iters={iters}")
+    _, usk = timed(lambda: falkon_fit(kern, x, ymulti, centers, lam,
+                                      iters=iters, backend=backend))
+    emit(f"multi_rhs.fused_k{k}", usk, f"k={k};xk1={usk / us1:.2f}")
+
+    def column_loop():
+        return [falkon_fit(kern, x, ymulti[:, j], centers, lam, iters=iters,
+                           backend=backend).alpha for j in range(k)]
+
+    _, usl = timed(lambda: jnp.stack(column_loop(), axis=1))
+    emit(f"multi_rhs.loop_k{k}", usl, f"k={k};xk1={usl / us1:.2f}")
+
+    lams = (1e-3, 1e-5, 1e-7)
+    sweep = KFoldSweep(kernel=kern, lams=lams, folds=folds, iters=iters,
+                       backend=backend)
+    y1 = ymulti[:, 0]
+    # time the scores array so _ready() blocks on real compute (KFoldResult
+    # itself is an unregistered dataclass jax cannot block on)
+    _, usf = timed(lambda: sweep.run(x, y1, center_set=cs).scores)
+    emit("multi_rhs.kfold", usf,
+         f"lams={len(lams)};folds={folds};solves={len(lams)};"
+         f"fits_naive={len(lams) * folds}")
+
+
 def bench_lm_steps(backend=None) -> None:
     """Smoke-scale per-arch step timing (framework sanity, not paper)."""
     from repro.configs import get_config, list_archs, smoke
@@ -251,6 +294,9 @@ BENCHES = {
     "fig3": (bench_fig3_lambda_stability,
              lambda backend: bench_fig3_lambda_stability(n=600, m_cap=120, n_test=200,
                                                          backend=backend)),
+    "multi_rhs": (bench_multi_rhs,
+                  lambda backend: bench_multi_rhs(n=600, m=96, k=8, iters=12,
+                                                  backend=backend)),
     "lm": (bench_lm_steps, bench_lm_steps),
 }
 
@@ -275,7 +321,9 @@ def main() -> None:
     wanted = [w for w in (args.only or "").split(",") if w]
     for w in wanted:  # a typo'd filter must not silently bench nothing
         if not any(w in name for name in BENCHES):
-            ap.error(f"--only token {w!r} matches no bench; registry: {','.join(BENCHES)}")
+            ap.error(f"--only token {w!r} matches no bench; "
+                     f"valid figure names: {', '.join(sorted(BENCHES))} "
+                     "(substring match, comma-separated)")
     print("name,us_per_call,derived")
     for name, (full, smoke) in BENCHES.items():
         if wanted and not any(w in name for w in wanted):

@@ -13,6 +13,10 @@ first-class slot:
     gaussian / laplacian / linear / matern32 / cauchy built in, each running
     on all three backends (jnp / Pallas / shard_map) from one definition
     (``register_kernel_family``; recipe in DESIGN.md §7).
+  * **Model selection** — ``KFoldSweep`` scores a lambda grid by k-fold
+    cross-validation where the k fold targets are columns of ONE multi-RHS
+    FALKON solve per lambda (shared centers, preconditioner and K_nM
+    streaming; the lambda grid rides the fused-fit cache).
   * **Serving** — ``KrrServer`` micro-batches prediction traffic over a
     fitted estimator or model.
 
@@ -43,6 +47,7 @@ from .samplers import (
     TwoPassSampler,
     UniformSampler,
 )
+from .sweep import KFoldResult, KFoldSweep
 
 __all__ = [
     # samplers (slot 1)
@@ -50,6 +55,8 @@ __all__ = [
     "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
     # estimators (slot 2)
     "FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr",
+    # model selection (slot 3)
+    "KFoldSweep", "KFoldResult",
     # kernel families
     "Kernel", "make_kernel", "KernelFamily", "register_kernel_family",
     "kernel_family_names",

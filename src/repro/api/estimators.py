@@ -11,7 +11,9 @@ Every estimator follows the same contract:
 ``FitConfig`` is a frozen dataclass so a configuration is hashable and
 shareable; the estimator itself is mutable sklearn-style (swap ``.config``
 between fits for a lambda sweep). ``y`` may be (n,) or (n, k): multi-output
-targets solve one system per column against the shared centers.
+targets ride ONE multi-RHS block-CG against the shared centers — the
+preconditioner, the K_nM streaming and the fused-fit compile are shared, so
+extra output columns are nearly free (GEMM flops only).
 
 Warm starts: with ``warm_start=True`` a refit on same-shaped X reuses the
 previously sampled centers, so consecutive ``fit`` calls ride the PR 2
@@ -156,6 +158,7 @@ class NystromRegressor(_KrrEstimator):
         self.center_set_: CenterSet | None = None
 
     def fit(self, x: Array, y: Array, *, key: Array | None = None) -> "NystromRegressor":
+        """Sample centers and solve Def. 4 directly; ``y`` (n,) or (n, k)."""
         x = jnp.asarray(x)
         cs = self.sampler.sample(self._key(key), x, self.kernel,
                                  backend=self.config.backend)
@@ -172,6 +175,7 @@ class ExactKrr(_KrrEstimator):
     sampler slot: every training point is a center."""
 
     def fit(self, x: Array, y: Array, *, key: Array | None = None) -> "ExactKrr":
+        """Solve Eq. 12 on the full Gram matrix; ``y`` (n,) or (n, k)."""
         self.model_ = exact_krr(self.kernel, jnp.asarray(x), jnp.asarray(y),
                                 self.config.lam, backend=self.config.backend)
         return self

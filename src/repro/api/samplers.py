@@ -66,6 +66,7 @@ class BlessSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Run Alg. 1 and return the final level's weighted (J, A)."""
         return self.ladder(key, x, kernel, backend=backend).final.centers
 
 
@@ -82,11 +83,13 @@ class BlessRSampler:
 
     def ladder(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> BlessResult:
+        """The full regularization path (every BlessLevel), for introspection."""
         return bless_r(key, x, kernel, self.lam, q=self.q, q2=self.q2,
                        lam0=self.lam0, t=self.t, m_cap=self.m_cap, backend=backend)
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Run Alg. 2 and return the final level's weighted (J, A)."""
         return self.ladder(key, x, kernel, backend=backend).final.centers
 
 
@@ -106,6 +109,7 @@ class UniformSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Draw m uniform centers from x's rows (weights per ``weights``)."""
         if self.weights not in ("nystrom", "identity"):
             raise ValueError(f"weights must be 'nystrom' or 'identity', got {self.weights!r}")
         n = x.shape[0]
@@ -131,6 +135,7 @@ class ExactRlsSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """m i.i.d. draws from the exact Eq. 1 leverage distribution."""
         scores = exact_rls(kernel, x, self.lam)
         p = scores / jnp.sum(scores)
         mbuf = _pow2(self.m)
@@ -162,6 +167,7 @@ class RecursiveRlsSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Run RECURSIVE-RLS over the halving tree; returns its (J, A)."""
         return recursive_rls(key, x, kernel, self.lam, q2=self.q2,
                              depth=self.depth, m_cap=self.m_cap, backend=backend)
 
@@ -177,6 +183,7 @@ class SqueakSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Run SQUEAK's streaming merge; returns its weighted (J, A)."""
         return squeak(key, x, kernel, self.lam, qbar=self.qbar,
                       n_chunks=self.n_chunks, m_cap=self.m_cap, backend=backend)
 
@@ -191,6 +198,7 @@ class TwoPassSampler:
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
+        """Pass 1: uniform pilot scores; pass 2: the m2 weighted draws."""
         return two_pass(key, x, kernel, self.lam, m1=self.m1, m2=self.m2,
                         backend=backend)
 

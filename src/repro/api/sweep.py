@@ -1,0 +1,159 @@
+"""Cross-validated model selection as multi-RHS solves — the third slot.
+
+``KFoldSweep`` turns the classic "k folds x L lambdas = k*L full fits" grid
+into L multi-RHS FALKON solves: the k fold targets become k columns of ONE
+block-CG (`repro.core.falkon`), sharing the sampled centers, the
+preconditioner, the K_nM streaming, and — across the lambda grid — the
+fused-fit jit cache (lam is traced, so every lambda after the first is a
+cache hit with zero retraces).
+
+Fold semantics (deliberate, documented): column f solves the full-data
+Nystrom system with fold f's *targets zeroed* — exactly what a per-fold
+refit of ``falkon_fit`` on the masked targets computes (the parity the
+tests pin down), while keeping the quadratic operator, n, and the
+regularization scale identical across folds so the per-lambda scores are
+directly comparable. This is the "fold-masked RHS" convention: held-out
+rows still contribute rows of K_nM to the operator (like ridge with the
+held-out targets imputed to zero), which is the price of sharing the
+streaming; it preserves the *ranking* over lambda that model selection
+needs. For exact row-exclusion CV, fit each fold separately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gram import BackendLike, Kernel
+from ..core.leverage import CenterSet
+from .estimators import FalkonRegressor, FitConfig
+from .samplers import BlessSampler, Sampler
+
+Array = jax.Array
+
+
+def fold_ids(key: Array, n: int, folds: int) -> Array:
+    """Random balanced fold assignment: (n,) int32 in [0, folds).
+
+    A random permutation dealt round-robin, so fold sizes differ by at most
+    one row.
+    """
+    perm = jax.random.permutation(key, n)
+    return jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n) % folds)
+
+
+@dataclasses.dataclass(frozen=True)
+class KFoldResult:
+    """Scores of one ``KFoldSweep.run``.
+
+    Attributes:
+      lams: the swept regularization grid, in run order.
+      scores: (len(lams), folds) fp32 — held-out MSE of fold f's column at
+        each lambda (column f is scored only on rows assigned to fold f).
+      fold_id: (n,) int32 fold assignment used, for reproducing splits.
+      center_set: the shared sampled ``CenterSet`` every solve rode on.
+    """
+
+    lams: tuple[float, ...]
+    scores: Array
+    fold_id: Array
+    center_set: CenterSet
+
+    @property
+    def mean_scores(self) -> Array:
+        """(len(lams),) — per-lambda MSE averaged over folds."""
+        return jnp.mean(self.scores, axis=1)
+
+    @property
+    def best_index(self) -> int:
+        """Index into ``lams`` with the lowest mean held-out MSE."""
+        return int(jnp.argmin(self.mean_scores))
+
+    @property
+    def best_lam(self) -> float:
+        """The selected regularization: ``lams[best_index]``."""
+        return self.lams[self.best_index]
+
+
+@dataclasses.dataclass
+class KFoldSweep:
+    """K-fold lambda selection where folds are columns of one solve.
+
+    One sampler call picks the shared centers; then each lambda costs a
+    single multi-RHS fused fit (folds = RHS columns on the k-bucketed
+    cache) plus one panel predict — against ``folds * len(lams)`` full
+    fits for the naive grid.
+
+    Attributes:
+      kernel: a ``Kernel`` or a registered family name ("gaussian", ...).
+      sampler: center sampler (slot 1); default ``BlessSampler()``.
+      lams: regularization grid for the solver (the paper's lam_falkon).
+      folds: number of cross-validation folds (= RHS columns per solve).
+      sigma: bandwidth when ``kernel`` is given by name.
+      iters: CG iterations per solve.
+      backend: kernel-operator backend spec (instance, name, or None).
+      seed: PRNG seed for sampling and fold assignment when ``run`` gets
+        no explicit key.
+
+    Example::
+
+        sweep = KFoldSweep(kernel="gaussian", sigma=2.0,
+                           lams=(1e-3, 1e-5, 1e-7), folds=5)
+        res = sweep.run(x, y)
+        best = res.best_lam            # lowest mean held-out MSE
+    """
+
+    kernel: Kernel | str = "gaussian"
+    sampler: Sampler | None = None
+    lams: Sequence[float] = (1e-3, 1e-5, 1e-7)
+    folds: int = 5
+    sigma: float = 1.0
+    iters: int = 20
+    backend: BackendLike = None
+    seed: int = 0
+
+    def run(self, x: Array, y: Array, *, key: Array | None = None,
+            center_set: CenterSet | None = None) -> KFoldResult:
+        """Sweep the lambda grid; returns per-fold/per-lambda held-out MSE.
+
+        ``x`` (n, d) and single-output ``y`` (n,) fp32; ``center_set``
+        bypasses the sampler with a precomputed (J, A). The first lambda
+        pays the one sampler call and the one fused-fit compile; every
+        further lambda is a cache-hit multi-RHS solve.
+        """
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        if y.ndim != 1:
+            raise ValueError(f"KFoldSweep needs single-output y (n,), got {y.shape}; "
+                             "the fold columns occupy the RHS axis")
+        if not 2 <= self.folds <= y.shape[0]:
+            raise ValueError(f"folds must be in [2, n], got {self.folds}")
+        key = jax.random.PRNGKey(self.seed) if key is None else key
+        k_sample, k_fold = jax.random.split(key)
+        fid = fold_ids(k_fold, y.shape[0], self.folds)
+        # column f: train targets with fold f zeroed (see module docstring)
+        y_panel = y[:, None] * (fid[:, None] != jnp.arange(self.folds)[None, :])
+        est = FalkonRegressor(
+            kernel=self.kernel, sigma=self.sigma,
+            sampler=self.sampler if self.sampler is not None else BlessSampler(),
+            warm_start=True)
+        scores = []
+        for i, lam in enumerate(self.lams):
+            est.config = FitConfig(lam=lam, iters=self.iters,
+                                   backend=self.backend, seed=self.seed)
+            est.fit(x, y_panel, key=k_sample,
+                    center_set=center_set if i == 0 else None)
+            pred = est.predict(x)  # (n, folds): one panel knm_matvec
+            sq = (pred - y[:, None]) ** 2
+            held_out = fid[:, None] == jnp.arange(self.folds)[None, :]
+            scores.append(jnp.sum(sq * held_out, axis=0)
+                          / jnp.sum(held_out, axis=0))
+        return KFoldResult(lams=tuple(float(ell) for ell in self.lams),
+                           scores=jnp.stack(scores),
+                           fold_id=fid,
+                           center_set=est.center_set_)
+
+
+__all__ = ["KFoldSweep", "KFoldResult", "fold_ids"]

@@ -123,21 +123,37 @@ class Backend:
         raise NotImplementedError
 
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
-        """v -> K_nM^T (K_nM v) operator closure for CG."""
+        """Build the v -> K_nM^T (K_nM v) operator closure for CG.
+
+        The returned op accepts a single fp32 vector (M,) or an (M, k)
+        panel of CG iterates — the multi-RHS block-CG form. Panels reuse
+        each streamed Gram block for every column, so extra right-hand
+        sides cost GEMM flops, not extra kernel evaluations.
+        """
         raise NotImplementedError
 
     def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
-        """K_nM^T y (M,) — the CG right-hand side."""
+        """K_nM^T y — the CG right-hand side(s).
+
+        ``y`` is fp32 (n,) -> (M,), or an (n, k) target panel -> (M, k).
+        """
         raise NotImplementedError
 
     def knm_operators(self, kernel: Kernel, x: Array, z: Array,
                       y: Array) -> tuple[KnmQuadraticOp, Array]:
-        """(quadratic op, K_nM^T y) together — lets backends that stage data
-        (sharding, device placement) pay the staging cost once."""
+        """Return (quadratic op, K_nM^T y) together.
+
+        Lets backends that stage data (sharding, device placement) pay the
+        staging cost once; ``y`` may be (n,) or an (n, k) panel.
+        """
         return self.knm_quadratic(kernel, x, z), self.knm_t(kernel, x, z, y)
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
-        """K(X, Z) v of shape (n,) — the predict / KRR forward contraction."""
+        """K(X, Z) v — the predict / KRR forward contraction.
+
+        ``v`` is fp32 (M,) -> (n,), or an (M, k) coefficient panel ->
+        (n, k) (multi-output predict: one kernel evaluation for all k).
+        """
         raise NotImplementedError
 
 
@@ -158,10 +174,12 @@ class JnpBackend(Backend):
         return self.block or STREAM_BLOCK.get(jax.default_backend(), 2048)
 
     def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) (n, m) fp32, streamed in row blocks of ``_block()``."""
         return blocked_cross(kernel, x, z, block=self._block())
 
     def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
                         mask: Array, reg: Array) -> Array:
+        """Eq. 3 quadratic form via a triangular solve on the padded K_JJ."""
         m = mask.astype(z.dtype)
         kjj = kernel.cross(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
         g = kernel.cross(x_cand, z) * m[None, :]
@@ -170,24 +188,31 @@ class JnpBackend(Backend):
         return jnp.sum(v * v, axis=0)
 
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        """CG quadratic op over the jnp row streamer ((M,) or (M, k))."""
         from .falkon import local_knm_quadratic
 
         return local_knm_quadratic(kernel, x, z, block=self._block())
 
     def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y, streamed; (n,) -> (M,) or panel (n, k) -> (M, k)."""
         from .falkon import local_knm_t
 
         return local_knm_t(kernel, x, z, y, block=self._block())
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
-        # jitted (serving hot path): one compiled call per (shapes, block)
+        """K(X, Z) v, jitted streaming (serving hot path): one compiled
+        call per (shapes, block); ``v`` (M,) -> (n,), (M, k) -> (n, k)."""
         return _jnp_knm_matvec(kernel, x, z, v, block=self._block())
 
 
 @functools.partial(jax.jit, static_argnames=("block",))
 def _jnp_knm_matvec(kernel: Kernel, x: Array, z: Array, v: Array, *,
                     block: int) -> Array:
-    """K(X, Z) v, streaming X in row blocks — the jnp predict contraction."""
+    """K(X, Z) v, streaming X in row blocks — the jnp predict contraction.
+
+    ``v`` (M,) or (M, k): each streamed Gram block is contracted against
+    every column before being discarded.
+    """
     n = x.shape[0]
     if n <= block:
         return kernel.cross(x, z) @ v
@@ -195,7 +220,7 @@ def _jnp_knm_matvec(kernel: Kernel, x: Array, z: Array, v: Array, *,
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     out = jax.lax.map(lambda xb: kernel.cross(xb, z) @ v,
                       xp.reshape(-1, block, x.shape[1]))
-    return out.reshape(-1)[:n]
+    return out.reshape((-1,) + v.shape[1:])[:n]
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +251,7 @@ class PallasBackend(Backend):
         return self.bn or bn, self.bm or bm
 
     def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) (n, m) fp32 from the fused Pallas gram kernel."""
         kind, sigma = _kernel_params(kernel)
         bn, bm = self._gram_tiles(x.shape[0], z.shape[0])
         return gram_ops.gram(x, z, sigma, kind=kind, bn=bn, bm=bm,
@@ -233,6 +259,8 @@ class PallasBackend(Backend):
 
     def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
                         mask: Array, reg: Array) -> Array:
+        """Eq. 3 quadratic form: Pallas gram tiles + the fused quadform
+        kernel consuming a dense (M, M) inverse (M ~ d_eff, cheap)."""
         m = mask.astype(x_cand.dtype)
         kjj = self.gram_block(kernel, z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
         chol = _chol_with_jitter(kjj)
@@ -249,18 +277,22 @@ class PallasBackend(Backend):
         return self.bn or _pick(PALLAS_MATVEC_BN, n)
 
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        """CG quadratic op over the fused Pallas sweep; accepts (M,) or an
+        (M, k) panel (one Gram tile per step serves every column)."""
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.make_knm_quadratic_op(
             x, z, sigma, kind=kind, bn=self._matvec_bn(x.shape[0]),
             interpret=self.interpret, bf16=self.bf16)
 
     def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y fused in VMEM; (n,) -> (M,) or panel (n, k) -> (M, k)."""
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.knm_t(x, z, y, sigma, kind=kind,
                                 bn=self._matvec_bn(x.shape[0]),
                                 interpret=self.interpret, bf16=self.bf16)
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        """K(X, Z) v fused in VMEM; (M,) -> (n,) or (M, k) -> (n, k)."""
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.knm_matvec(x, z, v, sigma, kind=kind,
                                      bn=self._matvec_bn(x.shape[0]),
@@ -314,6 +346,7 @@ class ShardedBackend(Backend):
         return self.mesh if self.mesh is not None else data_mesh(self.axis)
 
     def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) with X rows sharded over the mesh, Z replicated."""
         from .distributed import shard_rows
 
         mesh = self._mesh()
@@ -322,6 +355,8 @@ class ShardedBackend(Backend):
 
     def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
                         mask: Array, reg: Array) -> Array:
+        """Eq. 3 quadratic form: candidates row-sharded, the (Mbuf, Mbuf)
+        Cholesky factor replicated (<= d_eff^2 by the paper's space bound)."""
         from .distributed import shard_rows
 
         mesh = self._mesh()
@@ -333,6 +368,8 @@ class ShardedBackend(Backend):
         return quad[: x_cand.shape[0]]
 
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        """CG quadratic op with X row-sharded and psum-ed (M,)/(M, k)
+        partials — the collective schedule of a DP gradient all-reduce."""
         from .distributed import dist_knm_quadratic, shard_rows
 
         mesh = self._mesh()
@@ -340,6 +377,7 @@ class ShardedBackend(Backend):
         return dist_knm_quadratic(mesh, kernel, xs, z, x.shape[0], self.axis)
 
     def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y with X, y row-sharded; (n,) -> (M,), (n, k) -> (M, k)."""
         from .distributed import dist_knm_t, shard_rows
 
         mesh = self._mesh()
@@ -348,6 +386,7 @@ class ShardedBackend(Backend):
 
     def knm_operators(self, kernel: Kernel, x: Array, z: Array,
                       y: Array) -> tuple[KnmQuadraticOp, Array]:
+        """(quadratic op, K_nM^T y), staging X/y on device exactly once."""
         from .distributed import dist_knm_quadratic, dist_knm_t, shard_rows
 
         mesh = self._mesh()
@@ -358,6 +397,7 @@ class ShardedBackend(Backend):
                 dist_knm_t(mesh, kernel, xs, ys, z, n, self.axis))
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        """K(X, Z) v, row-parallel (no collective); (M,) or (M, k) ``v``."""
         from .distributed import dist_knm_matvec, shard_rows
 
         mesh = self._mesh()

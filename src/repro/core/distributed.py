@@ -48,7 +48,12 @@ def shard_rows(mesh: Mesh, x: Array, axis: str = "data") -> Array:
 
 def dist_knm_quadratic(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array,
                        n_valid: int, axis: str = "data") -> Callable[[Array], Array]:
-    """Returns v -> K_nM^T (K_nM v) with X row-sharded over ``axis``."""
+    """Returns v -> K_nM^T (K_nM v) with X row-sharded over ``axis``.
+
+    ``v`` may be (M,) or an (M, k) panel (replicated either way): each
+    device contracts its local Gram block against every column, and the
+    psum-ed partial is (M,) or (M, k) accordingly.
+    """
     n_pad = x_sharded.shape[0]
 
     @jax.jit
@@ -66,12 +71,13 @@ def dist_knm_quadratic(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array,
 
 def dist_knm_t(mesh: Mesh, kernel: Kernel, x_sharded: Array, y_sharded: Array, z: Array,
                n_valid: int, axis: str = "data") -> Array:
-    """K_nM^T y with X, y row-sharded."""
+    """K_nM^T y with X, y row-sharded; ``y`` (n,) -> (M,), (n, k) -> (M, k)."""
     n_pad = x_sharded.shape[0]
 
     def local(xl: Array, yl: Array) -> Array:
         rows = jax.lax.axis_index(axis) * (n_pad // mesh.shape[axis]) + jnp.arange(xl.shape[0])
-        yl = jnp.where(rows < n_valid, yl, 0.0)
+        valid = rows < n_valid
+        yl = jnp.where(valid if yl.ndim == 1 else valid[:, None], yl, 0.0)
         return jax.lax.psum(kernel.cross(xl, z).T @ yl, axis)
 
     return jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis, None), P(axis)),
@@ -93,9 +99,10 @@ def _dist_knm_matvec_fn(mesh: Mesh, axis: str):
 
 def dist_knm_matvec(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array, v: Array,
                     n_valid: int, axis: str = "data") -> Array:
-    """K_nM v with X row-sharded — the predict contraction. The output is
-    row-parallel (each device owns its rows), so no collective is needed;
-    padded rows produce values that are sliced off."""
+    """K_nM v with X row-sharded — the predict contraction. ``v`` may be
+    (M,) or an (M, k) panel (one local Gram evaluation serves all columns).
+    The output is row-parallel (each device owns its rows), so no collective
+    is needed; padded rows produce values that are sliced off."""
     return _dist_knm_matvec_fn(mesh, axis)(kernel, x_sharded, z, v)[:n_valid]
 
 

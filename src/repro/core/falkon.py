@@ -22,16 +22,30 @@ kernel (repro.kernels.falkon_matvec), or the shard_map data-parallel one in
 core/distributed.py. All three share this file's CG loop, and
 ``FalkonModel.predict`` serves K_nM alpha through the same seam.
 
+Multi-RHS block-CG: ``y`` may be (n,) or (n, k). All k right-hand sides ride
+ONE CG — the iterate is an (M, k) panel, every K_nM stream (the dominant
+cost, identical for every column) is evaluated once per iteration and
+contracted against the whole panel, and the preconditioner is shared. Each
+column keeps its own step sizes (alpha_j, mu_j from per-column reductions)
+with per-column convergence masking: a column whose residual has collapsed
+to fp32 noise freezes while the others keep iterating. Extra output columns
+therefore cost only the extra (n, k) GEMM flops, not extra kernel
+evaluations — see ``cg`` and DESIGN.md §2.4.
+
 Fused whole-fit path (DESIGN.md §2.4): for jit-safe backends with no
 per-iteration callback, ``falkon_fit`` compiles preconditioner + CG + alpha
 recovery into ONE ``jax.jit`` call — repeated fits (benchmark sweeps,
 serving-side refits) pay a single dispatch instead of ~iters host round
 trips. The jit cache is shape-bucketed: X/y rows are padded up to a multiple
-of the backend's stream block and masked inside the trace, so every n in a
-bucket shares one executable. Cache key (static): row bucket, (M, d), iters,
+of the backend's stream block and masked inside the trace, and the RHS
+count k >= 2 is padded up to a power-of-two column bucket (zero columns are
+frozen by the convergence mask; single-output keeps true vector shapes), so
+every (n, k) in a bucket shares one executable. Cache key (static): row
+bucket, k bucket, (M, d), iters,
 backend instance, kernel family. Traced (never retraces): lam, n, X, y,
-centers, a_diag, kernel bandwidth. The padded y buffer is donated (it is
-always freshly allocated here); X is not (callers reuse it across fits).
+centers, a_diag, kernel bandwidth. The padded y panel is donated (it is
+always freshly allocated here); X is NOT donated — callers reuse it across
+fits (lambda sweeps, warm-start refits, k-fold sweeps).
 """
 from __future__ import annotations
 
@@ -48,6 +62,11 @@ from .leverage import CenterSet, _chol_with_jitter
 Array = jax.Array
 
 
+def _bcol(s: Array, v: Array) -> Array:
+    """Broadcast a per-row scale (M,) against v of shape (M,) or (M, k)."""
+    return s[:, None] if v.ndim == 2 else s
+
+
 class Preconditioner(NamedTuple):
     """Factors of Def. 2, Example 1.3 (eigendecomposition branch).
 
@@ -55,6 +74,9 @@ class Preconditioner(NamedTuple):
     deficient (duplicate rows); the eigh-based partial isometry Q with rank
     truncation is the paper's own answer (Def. 2 requires only Q^T Q = I,
     q <= M) and is fp32-robust where the Cholesky branch explodes.
+
+    ``apply``/``apply_t`` accept a single vector or an (·, k) panel — B is
+    column-separable, so one application serves every CG right-hand side.
     """
 
     q_iso: Array  # (M, q) partial isometry
@@ -64,14 +86,14 @@ class Preconditioner(NamedTuple):
     n: int
 
     def apply(self, v: Array) -> Array:
-        """B v = (1/sqrt n) A^{-1/2} Q T^{-1} R^{-1} v,  v (q,)."""
-        u = self.q_iso @ (v / (self.t_diag * self.r_diag))
-        return self.inv_sqrt_a * u / jnp.sqrt(self.n)
+        """B v = (1/sqrt n) A^{-1/2} Q T^{-1} R^{-1} v,  v (q,) or (q, k)."""
+        u = self.q_iso @ (v / _bcol(self.t_diag * self.r_diag, v))
+        return _bcol(self.inv_sqrt_a, u) * u / jnp.sqrt(self.n)
 
     def apply_t(self, v: Array) -> Array:
-        """B^T v,  v (M,) -> (q,)."""
-        u = self.q_iso.T @ (self.inv_sqrt_a * v / jnp.sqrt(self.n))
-        return u / (self.t_diag * self.r_diag)
+        """B^T v,  v (M,) or (M, k) -> (q,) or (q, k)."""
+        u = self.q_iso.T @ (_bcol(self.inv_sqrt_a, v) * v / jnp.sqrt(self.n))
+        return u / _bcol(self.t_diag * self.r_diag, u)
 
 
 def make_preconditioner(kernel: Kernel, z: Array, a_diag: Array, lam: float, n: int,
@@ -101,11 +123,16 @@ def make_preconditioner(kernel: Kernel, z: Array, a_diag: Array, lam: float, n: 
 # ---------------------------------------------------------------------------
 
 KnmOp = Callable[[Array], tuple[Array, Array]]
-# v (M,) -> (K_nM^T K_nM v  (M,),  K_nM^T y (M,))  -- the second returned once
+# v (M,) or (M, k) -> (K_nM^T K_nM v, K_nM^T y)  -- the second returned once
 
 
 def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192) -> Callable[[Array], Array]:
-    """v -> K_nM^T (K_nM v), streaming x in row blocks (pure-jnp reference)."""
+    """v -> K_nM^T (K_nM v), streaming x in row blocks (pure-jnp reference).
+
+    ``v`` may be (M,) or an (M, k) panel: each streamed Gram block is built
+    once and contracted against every column, so extra right-hand sides cost
+    GEMM flops only — no extra kernel evaluations.
+    """
     n, m = x.shape[0], z.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
@@ -118,7 +145,7 @@ def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192
             g = kernel.cross(xb, z) * mb[:, None]
             return carry + g.T @ (g @ v), None
 
-        out, _ = jax.lax.scan(body, jnp.zeros((m,), v.dtype),
+        out, _ = jax.lax.scan(body, jnp.zeros((m,) + v.shape[1:], v.dtype),
                               (xp.reshape(nb, block, -1), valid))
         return out
 
@@ -126,19 +153,20 @@ def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192
 
 
 def local_knm_t(kernel: Kernel, x: Array, z: Array, y: Array, *, block: int = 8192) -> Array:
-    """K_nM^T y, streamed."""
+    """K_nM^T y, streamed; ``y`` (n,) -> (M,), or an (n, k) panel -> (M, k)."""
     n, m = x.shape[0], z.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
-    yp = jnp.pad(y, (0, pad))
+    yp = jnp.pad(y, ((0, pad),) + ((0, 0),) * (y.ndim - 1))
     nb = xp.shape[0] // block
 
     def body(carry, args):
         xb, yb = args
         return carry + kernel.cross(xb, z).T @ yb, None
 
-    out, _ = jax.lax.scan(body, jnp.zeros((m,), x.dtype),
-                          (xp.reshape(nb, block, -1), yp.reshape(nb, block)))
+    out, _ = jax.lax.scan(body, jnp.zeros((m,) + y.shape[1:], x.dtype),
+                          (xp.reshape(nb, block, -1),
+                           yp.reshape((nb, block) + y.shape[1:])))
     return out
 
 
@@ -147,41 +175,50 @@ def local_knm_t(kernel: Kernel, x: Array, z: Array, y: Array, *, block: int = 81
 # ---------------------------------------------------------------------------
 
 
+#: Per-column freeze threshold: a column whose squared residual norm has
+#: dropped below this fraction of its initial value (or started at exactly
+#: zero — padded bucket columns) is converged to fp32 noise; freezing it
+#: avoids 0/0 step sizes and needless panel updates while other columns
+#: keep iterating. sqrt(1e-14) ~ fp32 eps, so no legitimate progress is cut.
+_CG_FREEZE_REL = 1e-14
+
+
 def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
        callback: Callable[[int, Array], None] | None = None) -> Array:
-    """Plain CG on SPD ``matvec``; fixed iteration count (paper uses t ~ log n).
+    """CG on SPD ``matvec``; fixed iteration count (paper uses t ~ log n).
+
+    ``b`` may be a single right-hand side (q,) or an (q, k) panel — the
+    multi-RHS block-CG form: one ``matvec`` evaluation per iteration serves
+    every column (the operator cost is column-count independent up to GEMM
+    flops), while the scalar recurrences (alpha, mu) run per column from
+    axis-0 reductions. Columns are individually frozen once converged (see
+    ``_CG_FREEZE_REL``); for (q,) inputs the recurrence is exactly plain CG.
 
     With ``callback`` the loop runs on host (per-iteration metrics for the
     Fig. 4/5 analogues); otherwise it is a single jitted lax.fori_loop.
     """
-    if callback is not None:
-        beta = jnp.zeros_like(b)
-        r = b
-        p = r
-        rs = jnp.dot(r, r)
-        for i in range(iters):
-            ap = matvec(p)
-            alpha = rs / jnp.maximum(jnp.dot(p, ap), 1e-30)
-            beta = beta + alpha * p
-            r = r - alpha * ap
-            rs_new = jnp.dot(r, r)
-            p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-            rs = rs_new
-            callback(i, beta)
-        return beta
+    rs0 = jnp.sum(b * b, axis=0)
 
-    def body(_, state):
+    def step(state):
         beta, r, p, rs = state
         ap = matvec(p)
-        alpha = rs / jnp.maximum(jnp.dot(p, ap), 1e-30)
+        active = rs > _CG_FREEZE_REL * rs0
+        alpha = jnp.where(active,
+                          rs / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30), 0.0)
         beta = beta + alpha * p
         r = r - alpha * ap
-        rs_new = jnp.dot(r, r)
-        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-        return beta, r, p, rs_new
+        rs_new = jnp.sum(r * r, axis=0)
+        mu = jnp.where(active, rs_new / jnp.maximum(rs, 1e-30), 0.0)
+        p = jnp.where(active, r + mu * p, p)
+        return beta, r, p, jnp.where(active, rs_new, rs)
 
-    init = (jnp.zeros_like(b), b, b, jnp.dot(b, b))
-    return jax.lax.fori_loop(0, iters, body, init)[0]
+    state = (jnp.zeros_like(b), b, b, rs0)
+    if callback is not None:
+        for i in range(iters):
+            state = step(state)
+            callback(i, state[0])
+        return state[0]
+    return jax.lax.fori_loop(0, iters, lambda _, s: step(s), state)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -201,11 +238,25 @@ def _fit_block(backend) -> int:
     return get() if get is not None else 4096
 
 
+def _k_bucket(k: int) -> int:
+    """Column bucket for the fused-fit cache: next power of two >= k.
+
+    One compiled solve serves every RHS count in a bucket (k is padded with
+    zero columns that the per-column convergence mask freezes from iteration
+    zero), bounding the jit cache at log2(k_max) executables per row bucket.
+    """
+    return 1 << max(0, k - 1).bit_length()
+
+
 def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
                     row_mask: Array, block: int):
     """(quadratic op, K_nM^T y) over bucket-padded rows with a traced
     validity mask — same math as local_knm_quadratic / local_knm_t, but the
-    mask is a tracer so one compiled solve serves every n in the bucket."""
+    mask is a tracer so one compiled solve serves every n in the bucket.
+    ``yp`` is (n_pad,) for a single-output fit or an (n_pad, kb) panel for
+    multi-RHS; the quadratic op consumes matching (M,) / (M, kb) iterates.
+    (True vector shapes are kept for kb absent — an (n, 1) panel lowers to
+    a markedly slower CPU program than the equivalent matvec.)"""
     m = z.shape[0]
     nb = xp.shape[0] // block
     xb = xp.reshape(nb, block, xp.shape[1])
@@ -217,15 +268,17 @@ def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
             g = kernel.cross(xblk, z) * mblk[:, None]
             return carry + g.T @ (g @ v), None
 
-        out, _ = jax.lax.scan(body, jnp.zeros((m,), v.dtype), (xb, mb))
+        out, _ = jax.lax.scan(body, jnp.zeros((m,) + v.shape[1:], v.dtype),
+                              (xb, mb))
         return out
 
     def body_t(carry, args):
         xblk, yblk = args
         return carry + kernel.cross(xblk, z).T @ yblk, None
 
-    kty, _ = jax.lax.scan(body_t, jnp.zeros((m,), xp.dtype),
-                          (xb, (yp * row_mask).reshape(nb, block)))
+    ym = yp * (row_mask if yp.ndim == 1 else row_mask[:, None])
+    kty, _ = jax.lax.scan(body_t, jnp.zeros((m,) + yp.shape[1:], xp.dtype),
+                          (xb, ym.reshape((nb, block) + yp.shape[1:])))
     return quad, kty
 
 
@@ -234,7 +287,12 @@ def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
 def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
                         a_diag: Array, lam: Array, n: Array, *, iters: int,
                         backend, block: int) -> Array:
-    """Preconditioner + CG + alpha recovery as one compiled program."""
+    """Preconditioner + multi-RHS CG + alpha recovery as one compiled program.
+
+    ``yp`` is the bucket-padded target: (n_pad,) for single-output, or an
+    (n_pad, kb) panel for multi-RHS; alpha comes back with matching shape
+    and the caller slices the real columns out.
+    """
     global _FUSED_FIT_TRACES
     _FUSED_FIT_TRACES += 1
     row_mask = jnp.arange(xp.shape[0]) < n
@@ -255,13 +313,10 @@ def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
 # FALKON estimator
 # ---------------------------------------------------------------------------
 
-#: Multi-output predict materializes the (n, M) Gram block only below this
-#: element count (16M fp32 = 64 MB); larger batches stream per column.
-_PREDICT_GRAM_ELEMS = 1 << 24
-
-
 @dataclasses.dataclass(frozen=True)
 class FalkonModel:
+    """A fitted FALKON / Nystrom-KRR predictor: x -> K(x, centers) alpha."""
+
     centers: Array  # (M, d)
     alpha: Array  # (M,) or (M, k) for multi-output fits
     kernel: Kernel
@@ -273,21 +328,14 @@ class FalkonModel:
         """K(x, centers) alpha through the kernel-operator seam.
 
         Returns (n,) for a single-output model, (n, k) for a multi-output
-        one. Single-output takes the fused ``knm_matvec`` (K_nM never
-        materialized). Multi-output pays one kernel evaluation regardless of
-        k when the (n, M) Gram block fits a bounded intermediate (one
-        ``gram_block`` + matmul — always the case for ``KrrServer`` waves);
-        past that bound it falls back to k fused ``knm_matvec`` calls so a
-        huge offline batch streams instead of materializing n*M floats.
+        one. Both take the fused ``knm_matvec`` panel contraction: K_nM is
+        never materialized, each streamed Gram block is evaluated once and
+        contracted against every alpha column, so extra outputs cost GEMM
+        flops only.
         """
         spec = backend if backend is not None else self.backend
         be = resolve_backend(spec, n=x.shape[0])
-        if self.alpha.ndim == 1:
-            return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
-        if x.shape[0] * self.centers.shape[0] <= _PREDICT_GRAM_ELEMS:
-            return be.gram_block(self.kernel, x, self.centers) @ self.alpha
-        return jnp.stack([be.knm_matvec(self.kernel, x, self.centers, self.alpha[:, j])
-                          for j in range(self.alpha.shape[1])], axis=1)
+        return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
 
 
 def falkon_fit(
@@ -314,26 +362,20 @@ def falkon_fit(
     ``callback`` needs the host CG loop; True forces it (raising if the
     backend cannot be traced); False forces the host-driven path.
 
-    ``y`` may be (n,) or (n, k): multi-output targets solve one CG per
-    column against the same centers. The columns share one *compile* (every
-    column after the first hits the fused cache on the identical shape
-    bucket) but are otherwise independent full solves — each re-derives the
-    preconditioner and re-streams K_nM. Batching the right-hand sides
-    through a multi-RHS CG is an open perf item (ROADMAP).
+    ``y`` may be (n,) or (n, k): multi-output targets ride ONE multi-RHS
+    block-CG against the same centers — the preconditioner, the K_nM
+    streaming and (on jit-safe backends) the fused-fit compile are all
+    shared across columns, so extra outputs cost only the extra GEMM flops.
+    On the fused path k is padded up to a power-of-two column bucket
+    (``_k_bucket``) so every RHS count in a bucket shares one executable.
     """
     n = x.shape[0]
     m = centers.shape[0]
     backend = resolve_backend(backend, n=n)
-    if y.ndim == 2:
-        if callback is not None:
-            raise ValueError("per-iteration callback is single-output only; "
-                             "fit columns separately to trace them")
-        cols = [falkon_fit(kernel, x, y[:, j], centers, lam, a_diag=a_diag,
-                           iters=iters, backend=backend, fused=fused)
-                for j in range(y.shape[1])]
-        return FalkonModel(centers=centers,
-                           alpha=jnp.stack([c.alpha for c in cols], axis=1),
-                           kernel=kernel, backend=backend)
+    single = y.ndim == 1
+    if not single and callback is not None:
+        raise ValueError("per-iteration callback is single-output only; "
+                         "fit columns separately to trace them")
     a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
     if fused is None:
         fused = backend.jit_safe and callback is None
@@ -345,13 +387,20 @@ def falkon_fit(
                              "pass fused=False to use callback")
         block = _fit_block(backend)
         pad = (-n) % block
+        # Single-output keeps true vector shapes (an (n, 1) panel lowers to
+        # a much slower CPU program); k >= 2 pads to the pow2 column bucket.
+        col_pad = 0 if single else _k_bucket(y.shape[1]) - y.shape[1]
         # yp is donated by _fused_falkon_solve, so it must be a fresh buffer
         # even when the bucket needs no padding (x is shared, never donated).
-        yp = jnp.pad(y, (0, pad)) if pad else y + jnp.zeros((), y.dtype)
+        if pad or col_pad:
+            yp = jnp.pad(y, ((0, pad),) if single else ((0, pad), (0, col_pad)))
+        else:
+            yp = y + jnp.zeros((), y.dtype)
         alpha = _fused_falkon_solve(
             kernel, jnp.pad(x, ((0, pad), (0, 0))), yp, centers, a_diag,
             jnp.asarray(lam, jnp.float32), jnp.asarray(n, jnp.int32),
             iters=iters, backend=backend, block=block)
+        alpha = alpha if single else alpha[:, : y.shape[1]]
         return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=backend)
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
     kmm = backend.gram_block(kernel, centers, centers)

@@ -102,6 +102,13 @@ def sq_dists(x: jax.Array, z: jax.Array) -> jax.Array:
 
 
 def make_kernel(name: str = "gaussian", sigma: float = 1.0, kappa_sq: float = 1.0) -> Kernel:
+    """Build a ``Kernel`` after validating ``name`` against the family
+    registry (unknown names raise with the registry enumerated).
+
+    ``sigma`` is the bandwidth (ignored by bandwidth-free families);
+    ``kappa_sq`` the uniform bound on k(x, x) — supply it for "linear" on
+    unnormalized inputs (Eq. 17 candidate-set sizing depends on it).
+    """
     get_family(name)  # fail fast with the registered families enumerated
     return Kernel(name=name, sigma=sigma, kappa_sq=kappa_sq)
 

@@ -1,22 +1,30 @@
-"""Pallas TPU kernels: the fused FALKON K_nM contractions.
+"""Pallas TPU kernels: the fused FALKON K_nM contractions (multi-RHS panels).
 
 Three operators share one tile schedule — each (bn, d) tile of X is streamed
 HBM->VMEM exactly once, the Gram tile G = k(X_tile, Z) is built in VMEM, and
 the contraction epilogue runs before the tile is discarded:
 
-  * ``falkon_matvec_pallas``  r = K_nM^T (K_nM v)  — the CG quadratic matvec
-  * ``knm_t_pallas``          r = K_nM^T y         — the CG right-hand side
-  * ``knm_matvec_pallas``     r = K_nM v           — predict / KRR forward
+  * ``falkon_matvec_pallas``  R = K_nM^T (K_nM V)  — the CG quadratic matvec
+  * ``knm_t_pallas``          R = K_nM^T Y         — the CG right-hand sides
+  * ``knm_matvec_pallas``     R = K_nM V           — predict / KRR forward
+
+All three take (·, kp) *panels* (the multi-RHS block-CG form; kp is the
+lane-padded column count, 128-aligned): the Gram tile — the expensive part,
+one MXU matmul plus the VPU distance/exp epilogue per (bn, M) block — is
+built once per tile and contracted against every column in the MXU epilogue,
+so extra right-hand sides add only (bn, M) x (M, kp) GEMM flops. A single
+RHS is the kp = 128 panel with one live column (ops.py pads/slices).
 
 On GPU the reference FALKON implementation materializes K_nM block-by-block
 in HBM and runs two GEMVs per block (arithmetic intensity ~4 FLOP/B on the
-second pass). Fusing keeps HBM traffic at n*d reads + n (or M) writes total,
-so the kernels are MXU-bound for M >= ~256 (DESIGN.md §2).
+second pass). Fusing keeps HBM traffic at n*d reads + n*kp (or M*kp) writes
+total, so the kernels are MXU-bound for M >= ~256 (DESIGN.md §2).
 
-Grid (n/bn,): Z (M, d) and the (M,) vector are VMEM-resident across the
-whole sweep (M*d <= ~4M floats for the paper's d_eff-sized center sets). The
-reductions (``falkon_matvec``/``knm_t``) revisit one (M,) output block every
-step and accumulate; ``knm_matvec`` writes a private (bn,) block per step.
+Grid (n/bn,): Z (M, d) and the (M, kp) panel are VMEM-resident across the
+whole sweep (M*(d+kp) <= ~4M floats for the paper's d_eff-sized center
+sets). The reductions (``falkon_matvec``/``knm_t``) revisit one (M, kp)
+output block every step and accumulate; ``knm_matvec`` writes a private
+(bn, kp) block per step.
 
 Mixed precision (``bf16=True``): the Gram tile's dominant (bn, d) x (d, M)
 product loads its operands as bf16 and accumulates on the MXU in fp32
@@ -56,6 +64,13 @@ def _gram_tile(x: jax.Array, z: jax.Array, *, kind: str, inv_scale: float,
     return fam.epilogue(d2, inv_scale)
 
 
+def _panel_t_g(g: jax.Array, t: jax.Array) -> jax.Array:
+    """G^T T: contract the shared (bn,) tile axis — (bn, M) x (bn, kp) ->
+    (M, kp), fp32 MXU accumulation."""
+    return jax.lax.dot_general(g, t, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
 def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
                    bn: int, n_valid: int, bf16: bool):
     i = pl.program_id(0)
@@ -69,8 +84,8 @@ def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
     g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
     g = jnp.where(rows < n_valid, g, 0.0)  # padded X rows contribute nothing
-    t = g @ v_ref[...].astype(jnp.float32)  # (bn,)
-    o_ref[...] += t @ g  # G^T t, still in VMEM
+    t = g @ v_ref[...].astype(jnp.float32)  # (bn, kp): one G, every column
+    o_ref[...] += _panel_t_g(g, t)  # G^T T, still in VMEM
 
 
 @partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret",
@@ -78,10 +93,10 @@ def _matvec_kernel(x_ref, z_ref, v_ref, o_ref, *, kind: str, inv_scale: float,
 def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float,
                          *, kind: str = "gaussian", bn: int = 512, n_valid: int,
                          interpret: bool = True, bf16: bool = False) -> jax.Array:
-    """K_nM^T K_nM v for pre-padded x (n, d), z (M, d), v (M,)."""
+    """K_nM^T K_nM V for pre-padded x (n, d), z (M, d), V (M, kp)."""
     n, d = x.shape
-    m = z.shape[0]
-    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    m, kp = z.shape[0], v.shape[1]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0 and kp % 128 == 0
     return pl.pallas_call(
         partial(_matvec_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
                 n_valid=n_valid, bf16=bf16),
@@ -89,17 +104,17 @@ def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: fl
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
             pl.BlockSpec((m, d), lambda i: (0, 0)),
-            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, kp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        out_specs=pl.BlockSpec((m, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kp), jnp.float32),
         interpret=interpret,
     )(x, z, v)
 
 
 def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
                   bn: int, n_valid: int, bf16: bool):
-    """r += y_tile^T k(X_tile, Z) — the CG right-hand side K_nM^T y, fused."""
+    """R += k(X_tile, Z)^T Y_tile — the CG right-hand sides K_nM^T Y, fused."""
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -111,7 +126,7 @@ def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
     g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
     g = jnp.where(rows < n_valid, g, 0.0)
-    o_ref[...] += y_ref[...].astype(jnp.float32) @ g  # (bn,) @ (bn, M)
+    o_ref[...] += _panel_t_g(g, y_ref[...].astype(jnp.float32))  # (M, kp)
 
 
 @partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret",
@@ -119,10 +134,10 @@ def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
 def knm_t_pallas(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
                  *, kind: str = "gaussian", bn: int = 512, n_valid: int,
                  interpret: bool = True, bf16: bool = False) -> jax.Array:
-    """K_nM^T y for pre-padded x (n, d), z (M, d), y (n,)."""
+    """K_nM^T Y for pre-padded x (n, d), z (M, d), Y (n, kp)."""
     n, d = x.shape
-    m = z.shape[0]
-    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    m, kp = z.shape[0], y.shape[1]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0 and kp % 128 == 0
     return pl.pallas_call(
         partial(_knm_t_kernel, kind=kind, inv_scale=float(inv_scale), bn=bn,
                 n_valid=n_valid, bf16=bf16),
@@ -130,45 +145,45 @@ def knm_t_pallas(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
             pl.BlockSpec((m, d), lambda i: (0, 0)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, kp), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        out_specs=pl.BlockSpec((m, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kp), jnp.float32),
         interpret=interpret,
     )(x, z, y)
 
 
 def _knm_matvec_kernel(x_ref, z_ref, a_ref, o_ref, *, kind: str,
                        inv_scale: float, bf16: bool):
-    """o_tile = k(X_tile, Z) alpha — the predict / KRR forward contraction.
+    """O_tile = k(X_tile, Z) A — the predict / KRR forward contraction.
 
-    No cross-step accumulation: each grid step owns its (bn,) output block,
-    so no init/revisit protocol is needed. Padded X rows produce garbage
-    that ops.py slices off; padded Z rows meet alpha's zero padding.
+    No cross-step accumulation: each grid step owns its (bn, kp) output
+    block, so no init/revisit protocol is needed. Padded X rows produce
+    garbage that ops.py slices off; padded Z rows meet A's zero padding.
     """
     x = x_ref[...].astype(jnp.float32)  # (bn, d)
     z = z_ref[...].astype(jnp.float32)  # (M, d)
     g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
-    o_ref[...] = g @ a_ref[...].astype(jnp.float32)  # (bn,)
+    o_ref[...] = g @ a_ref[...].astype(jnp.float32)  # (bn, kp)
 
 
 @partial(jax.jit, static_argnames=("kind", "bn", "interpret", "inv_scale", "bf16"))
 def knm_matvec_pallas(x: jax.Array, z: jax.Array, alpha: jax.Array, inv_scale: float,
                       *, kind: str = "gaussian", bn: int = 512,
                       interpret: bool = True, bf16: bool = False) -> jax.Array:
-    """K_nM alpha for pre-padded x (n, d), z (M, d), alpha (M,)."""
+    """K_nM A for pre-padded x (n, d), z (M, d), A (M, kp)."""
     n, d = x.shape
-    m = z.shape[0]
-    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0
+    m, kp = z.shape[0], alpha.shape[1]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0 and kp % 128 == 0
     return pl.pallas_call(
         partial(_knm_matvec_kernel, kind=kind, inv_scale=float(inv_scale), bf16=bf16),
         grid=(n // bn,),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
             pl.BlockSpec((m, d), lambda i: (0, 0)),
-            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, kp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_specs=pl.BlockSpec((bn, kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, kp), jnp.float32),
         interpret=interpret,
     )(x, z, alpha)

@@ -1,10 +1,14 @@
 """Public wrappers for the fused FALKON K_nM contractions.
 
-``falkon_matvec`` (K_nM^T K_nM v), ``knm_t`` (K_nM^T y) and ``knm_matvec``
-(K_nM v — predict / KRR forward) are the operators
+``falkon_matvec`` (K_nM^T K_nM V), ``knm_t`` (K_nM^T Y) and ``knm_matvec``
+(K_nM V — predict / KRR forward) are the operators
 ``repro.core.backend.PallasBackend`` serves to ``repro.core.falkon``; all
-pad internally to tile boundaries. ``bf16=True`` selects the mixed-precision
-tile path (bf16 MXU operands, fp32 accumulation — see falkon_matvec.py).
+pad internally to tile boundaries. Every wrapper accepts a single vector
+(the classic FALKON shapes) or an (·, k) multi-RHS panel; panels are padded
+up to the 128-lane tile width, streamed through the panel kernels in
+falkon_matvec.py — one Gram tile evaluation for every column — and sliced
+back. ``bf16=True`` selects the mixed-precision tile path (bf16 MXU
+operands, fp32 accumulation — see falkon_matvec.py).
 """
 from __future__ import annotations
 
@@ -22,10 +26,23 @@ def _inv_scale(kind: str, sigma: float) -> float:
     return float(get_family(kind).inv_scale(sigma))
 
 
+def _as_panel(v: jax.Array) -> tuple[jax.Array, bool]:
+    """(lane-padded (·, kp) panel, was_vector) for a (·,) or (·, k) input."""
+    squeeze = v.ndim == 1
+    vp = v[:, None] if squeeze else v
+    return pad_dim(vp, 1, round_up(vp.shape[1], 128)), squeeze
+
+
+def _unpanel(out: jax.Array, k_or_none: int | None) -> jax.Array:
+    """Slice the lane padding back off; ``None`` restores a vector."""
+    return out[:, 0] if k_or_none is None else out[:, :k_or_none]
+
+
 def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,
                   kind: str = "gaussian", bn: int = 512,
                   interpret: bool | None = None, bf16: bool = False) -> jax.Array:
-    """K_nM^T (K_nM v) -> (M,) fp32. Arbitrary shapes, padded internally."""
+    """K_nM^T (K_nM v) -> (M,) or (M, k) fp32. Arbitrary shapes, padded
+    internally; a panel ``v`` is the multi-RHS block-CG iterate."""
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -34,15 +51,16 @@ def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, 
     zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
     # padded Z rows are the all-zeros point; its kernel values are nonzero but
     # v is zero-padded so they never enter t, and we slice r back to (m,).
-    vp = pad_dim(v, 0, round_up(m, 128))
+    vp, squeeze = _as_panel(pad_dim(v, 0, round_up(m, 128)))
     out = falkon_matvec_pallas(xp, zp, vp, float(_inv_scale(kind, sigma)), kind=kind,
                                bn=bn, n_valid=n, interpret=interpret, bf16=bf16)
-    return out[:m]
+    return _unpanel(out[:m], None if squeeze else v.shape[1])
 
 
 def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
                           kind: str = "gaussian", bn: int = 512,
                           interpret: bool | None = None, bf16: bool = False):
+    """Close over (x, z) -> the CG quadratic operator ``falkon_matvec``."""
     def op(v: jax.Array) -> jax.Array:
         return falkon_matvec(x, z, v, sigma, kind=kind, bn=bn, interpret=interpret,
                              bf16=bf16)
@@ -53,33 +71,37 @@ def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
 def knm_t(x: jax.Array, z: jax.Array, y: jax.Array, sigma: float = 1.0, *,
           kind: str = "gaussian", bn: int = 512,
           interpret: bool | None = None, bf16: bool = False) -> jax.Array:
-    """K_nM^T y -> (M,) fp32. Arbitrary shapes, padded internally."""
+    """K_nM^T y -> (M,) or (M, k) fp32. Arbitrary shapes, padded internally;
+    a panel ``y`` yields every CG right-hand side from one X sweep."""
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
     dp = round_up(d, 128)
     xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
     zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
-    yp = pad_dim(y, 0, round_up(n, bn))
+    yp, squeeze = _as_panel(pad_dim(y, 0, round_up(n, bn)))
     out = knm_t_pallas(xp, zp, yp, float(_inv_scale(kind, sigma)), kind=kind, bn=bn,
                        n_valid=n, interpret=interpret, bf16=bf16)
-    return out[:m]
+    return _unpanel(out[:m], None if squeeze else y.shape[1])
 
 
 def knm_matvec(x: jax.Array, z: jax.Array, alpha: jax.Array, sigma: float = 1.0, *,
                kind: str = "gaussian", bn: int = 512,
                interpret: bool | None = None, bf16: bool = False) -> jax.Array:
-    """K_nM alpha -> (n,) fp32 — the predict contraction, fused in VMEM."""
+    """K_nM alpha -> (n,) or (n, k) fp32 — the predict contraction, fused in
+    VMEM; an (M, k) ``alpha`` panel serves multi-output predict with one
+    kernel evaluation."""
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
     dp = round_up(d, 128)
     xp = pad_dim(pad_dim(x, 0, round_up(n, bn)), 1, dp)
     zp = pad_dim(pad_dim(z, 0, round_up(m, 128)), 1, dp)
-    ap = pad_dim(alpha, 0, round_up(m, 128))  # zero alpha on padded Z rows
+    # zero alpha on padded Z rows
+    ap, squeeze = _as_panel(pad_dim(alpha, 0, round_up(m, 128)))
     out = knm_matvec_pallas(xp, zp, ap, float(_inv_scale(kind, sigma)), kind=kind,
                             bn=bn, interpret=interpret, bf16=bf16)
-    return out[:n]
+    return _unpanel(out[:n], None if squeeze else alpha.shape[1])
 
 
 falkon_matvec_reference = falkon_matvec_ref

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for the fused FALKON matvec."""
+"""Pure-jnp oracle for the fused FALKON matvec.
+
+Shapes are generic over the trailing axis: v / y / alpha may be single
+vectors or (·, k) multi-RHS panels, exactly like the Pallas kernels.
+"""
 import jax
 import jax.numpy as jnp
 

@@ -16,7 +16,9 @@ model, independent of traffic.
 ``model`` accepts either a raw ``FalkonModel`` or any fitted ``repro.api``
 estimator (``FalkonRegressor`` / ``NystromRegressor`` / ``ExactKrr`` — the
 fitted ``model_`` is unwrapped). Multi-output models serve (r, k) blocks per
-request through the same wave packing.
+request through the same wave packing; since the multi-RHS panel contraction
+(DESIGN.md §2.4) a k-output wave costs ONE fused ``knm_matvec`` with the
+(M, k) alpha panel — one kernel evaluation per wave regardless of k.
 
     server = KrrServer(FalkonRegressor(...).fit(x, y))
     rid = server.submit(x_req)        # queue a (r, d) request

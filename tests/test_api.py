@@ -154,6 +154,9 @@ def test_center_set_bypass_matches_sampler_path():
 
 @pytest.mark.parametrize("name", BACKENDS)
 def test_multi_output_matches_columnwise_fits(name):
+    """Multi-output rides ONE multi-RHS block-CG; each column must agree
+    with an independent single-RHS fit to CG/fp32 tolerance (the solves
+    share the matvec panel, so bitwise equality is not expected)."""
     x, y = _problem()
     Y = jnp.stack([y, jnp.cos(x[:, 2]), -0.5 * y + 1.0], axis=1)
     est = FalkonRegressor(kernel=KERN, sampler=UniformSampler(m=48),
@@ -165,10 +168,14 @@ def test_multi_output_matches_columnwise_fits(name):
     for j in range(3):
         col = falkon_fit(KERN, x, Y[:, j], est.centers_, 1e-3,
                          a_diag=est.a_diag_, iters=15, backend=name)
-        # same alpha bitwise; predictions differ only by the contraction
-        # route (fused knm_matvec vs one gram_block + matmul)
-        np.testing.assert_array_equal(est.model_.alpha[:, j], col.alpha)
-        np.testing.assert_allclose(pred[:, j], col.predict(x), rtol=2e-5, atol=2e-5)
+        # alpha itself is ill-conditioned (the CG solves reassociate), so
+        # parity is norm-relative on alpha and tight on predictions
+        rel_a = float(jnp.linalg.norm(est.model_.alpha[:, j] - col.alpha)
+                      / jnp.linalg.norm(col.alpha))
+        assert rel_a < 5e-3, (name, j, rel_a)
+        ref = col.predict(x)
+        rel_p = float(jnp.linalg.norm(pred[:, j] - ref) / jnp.linalg.norm(ref))
+        assert rel_p < 1e-3, (name, j, rel_p)
     assert est.score(x, Y) > 0.5
 
 
@@ -266,7 +273,7 @@ def test_api_surface_is_exactly_all():
     of repro.api is either in __all__ or a submodule of the package."""
     public = {n for n in vars(api) if not n.startswith("_")}
     modules = {n for n in public if inspect.ismodule(getattr(api, n))}
-    assert modules <= {"estimators", "samplers"}, modules
+    assert modules <= {"estimators", "samplers", "sweep"}, modules
     assert public - modules == set(api.__all__)
 
 

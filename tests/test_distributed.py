@@ -34,11 +34,25 @@ _SCRIPT = textwrap.dedent("""
     rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
     assert rel < 1e-4, rel
 
+    # distributed matvec accepts multi-RHS panels (one Gram eval, k columns)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (m, 3))
+    wantp = g.T @ (g @ vp)
+    gotp = op(vp)
+    rel = float(jnp.linalg.norm(gotp - wantp) / jnp.linalg.norm(wantp))
+    assert gotp.shape == (m, 3) and rel < 1e-4, rel
+
     # distributed FALKON == local FALKON
     fd = falkon_fit_distributed(mesh, kern, x, y, z, 1e-3, iters=20)
     fl = falkon_fit(kern, x, y, z, 1e-3, iters=20)
     rel = float(jnp.linalg.norm(fd.alpha - fl.alpha) / jnp.linalg.norm(fl.alpha))
     assert rel < 1e-3, rel
+
+    # distributed multi-RHS FALKON == local multi-RHS FALKON (8 devices)
+    Y = jnp.stack([y, jnp.cos(x[:, 1]), 0.3 * x[:, 2] ** 2], axis=1)
+    fdm = falkon_fit_distributed(mesh, kern, x, Y, z, 1e-3, iters=20)
+    flm = falkon_fit(kern, x, Y, z, 1e-3, iters=20)
+    rel = float(jnp.linalg.norm(fdm.alpha - flm.alpha) / jnp.linalg.norm(flm.alpha))
+    assert fdm.alpha.shape == (m, 3) and rel < 1e-3, rel
 
     # collective parser sees the psum in the compiled distributed matvec
     from repro.launch.hlo_analysis import collective_bytes

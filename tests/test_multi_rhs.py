@@ -1,0 +1,207 @@
+"""Multi-RHS block-CG (core/falkon.py): per-column parity with independent
+single-RHS solves across every kernel family and backend, the k-bucketed
+fused-fit cache (zero retraces within a bucket), per-column convergence
+masking, and the KFoldSweep scenario vs naive per-fold refits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, KFoldSweep, UniformSampler
+from repro.core import cg, falkon_fit, make_kernel
+from repro.core import falkon as falkon_mod
+
+BACKENDS = ["jnp", "pallas", "sharded"]
+ALL_FAMILIES = ["gaussian", "laplacian", "linear", "matern32", "cauchy"]
+
+
+def _problem(n=300, m=32, d=6, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    cols = [jnp.sin(2 * x[:, 0]), jnp.cos(x[:, 1]), 0.3 * x[:, 2] ** 2,
+            x[:, 3] * x[:, 0], jnp.tanh(x[:, 1] + x[:, 2]), -x[:, 4],
+            jnp.sin(x[:, 5]) * x[:, 0], jnp.abs(x[:, 2])]
+    return x, jnp.stack(cols[:k], axis=1), x[:m]
+
+
+# -- parity: one block-CG vs k independent solves ----------------------------
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("kind", ALL_FAMILIES)
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_multi_rhs_matches_column_loop(name, kind, k):
+    """The panel solve shares the preconditioner and the K_nM streaming, but
+    every column's solution must match its own single-RHS fit (the PR 3
+    column loop) to CG/fp32 tolerance."""
+    kern = make_kernel(kind, sigma=1.7, kappa_sq=10.0)
+    x, y, z = _problem(k=k)
+    multi = falkon_fit(kern, x, y, z, 1e-3, iters=10, backend=name)
+    assert multi.alpha.shape == (z.shape[0], k)
+    pred = multi.predict(x)
+    assert pred.shape == (x.shape[0], k)
+    for j in range(k):
+        col = falkon_fit(kern, x, y[:, j], z, 1e-3, iters=10, backend=name)
+        ref = col.predict(x)
+        rel = float(jnp.linalg.norm(pred[:, j] - ref)
+                    / jnp.maximum(jnp.linalg.norm(ref), 1e-30))
+        assert rel < 1e-3, (kind, name, j, rel)
+
+
+def test_multi_rhs_host_path_matches_fused():
+    """fused=False drives the same panel CG from the host loop."""
+    kern = make_kernel("gaussian", sigma=1.5)
+    x, y, z = _problem(k=3)
+    fused = falkon_fit(kern, x, y, z, 1e-3, iters=20, backend="jnp")
+    host = falkon_fit(kern, x, y, z, 1e-3, iters=20, backend="jnp", fused=False)
+    rel = float(jnp.linalg.norm(fused.predict(x) - host.predict(x))
+                / jnp.linalg.norm(host.predict(x)))
+    assert rel < 1e-3
+
+
+def test_multi_output_callback_rejected():
+    kern = make_kernel("gaussian", sigma=1.5)
+    x, y, z = _problem(k=2)
+    with pytest.raises(ValueError, match="single-output"):
+        falkon_fit(kern, x, y, z, 1e-3, callback=lambda i, m: None)
+
+
+# -- the k-bucketed fused-fit cache ------------------------------------------
+
+
+def test_fused_cache_k_bucket_zero_retrace():
+    """k is padded to a pow2 column bucket: every RHS count in a bucket
+    shares one executable (m=44 / iters=13 are unique to this test so other
+    files' fits cannot mask the traces)."""
+    kern = make_kernel("gaussian", sigma=1.5)
+    x, y8, z = _problem(m=44, k=8)
+    t0 = falkon_mod._FUSED_FIT_TRACES
+    falkon_fit(kern, x, y8[:, :3], z, 1e-3, iters=13, backend="jnp")
+    assert falkon_mod._FUSED_FIT_TRACES == t0 + 1  # k=3 compiled bucket kb=4
+    falkon_fit(kern, x, y8[:, :4], z, 1e-3, iters=13, backend="jnp")
+    assert falkon_mod._FUSED_FIT_TRACES == t0 + 1  # k=4: same bucket, no trace
+    falkon_fit(kern, x, y8[:, :5], z, 1e-3, iters=13, backend="jnp")
+    assert falkon_mod._FUSED_FIT_TRACES == t0 + 2  # k=5 -> bucket kb=8
+    falkon_fit(kern, x, y8, z, 1e-3, iters=13, backend="jnp")
+    assert falkon_mod._FUSED_FIT_TRACES == t0 + 2  # k=8 rides the kb=8 bucket
+    falkon_fit(kern, x, y8[:, 0], z, 1e-3, iters=13, backend="jnp")
+    assert falkon_mod._FUSED_FIT_TRACES == t0 + 3  # single-output: kb=1
+
+
+def test_k_bucket_padding_columns_are_inert():
+    """A k=3 fit runs in the kb=4 bucket with a zero fourth column; its
+    presence must not perturb the real columns (vs a k=4 fit whose fourth
+    column IS explicitly zero)."""
+    kern = make_kernel("gaussian", sigma=1.5)
+    x, y, z = _problem(k=3)
+    a = falkon_fit(kern, x, y, z, 1e-3, iters=15, backend="jnp")
+    b = falkon_fit(kern, x, jnp.pad(y, ((0, 0), (0, 1))), z, 1e-3, iters=15,
+                   backend="jnp")
+    np.testing.assert_array_equal(a.alpha, b.alpha[:, :3])
+    np.testing.assert_array_equal(b.alpha[:, 3], jnp.zeros(z.shape[0]))
+
+
+# -- per-column convergence masking ------------------------------------------
+
+
+def test_cg_freezes_converged_columns():
+    """A zero RHS column (rs0 = 0) must stay exactly zero while the live
+    columns converge; an easy column frozen early must not drift."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (40, 40))
+    a = a @ a.T / 40.0 + jnp.eye(40)
+    b_live = jax.random.normal(jax.random.PRNGKey(1), (40,))
+    b = jnp.stack([b_live, jnp.zeros(40)], axis=1)
+    sol = cg(lambda v: a @ v, b, 60)
+    np.testing.assert_array_equal(sol[:, 1], jnp.zeros(40))
+    np.testing.assert_allclose(a @ sol[:, 0], b_live, rtol=1e-4, atol=1e-4)
+    # panel solve of the live column agrees with the single-RHS path
+    single = cg(lambda v: a @ v, b_live, 60)
+    np.testing.assert_allclose(sol[:, 0], single, rtol=1e-4, atol=1e-5)
+
+
+# -- KFoldSweep: model selection as one multi-RHS solve per lambda -----------
+
+
+LAMS = (1e-2, 1e-4, 1e-6)
+
+
+def _sweep_problem(n=400, d=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    y = (jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1] ** 2
+         + 0.05 * jax.random.normal(jax.random.PRNGKey(seed + 1), (n,)))
+    return x, y
+
+
+def test_kfold_sweep_matches_naive_per_fold_refits():
+    """Every (lam, fold) score must equal the naive loop: a full single-RHS
+    refit on the fold-masked targets, scored on the held-out rows."""
+    from repro.api.sweep import fold_ids
+
+    x, y = _sweep_problem()
+    folds = 4
+    sweep = KFoldSweep(kernel="gaussian", sigma=1.5, sampler=UniformSampler(m=64),
+                       lams=LAMS, folds=folds, iters=15, backend="jnp", seed=0)
+    res = sweep.run(x, y)
+    assert res.scores.shape == (len(LAMS), folds)
+
+    kern = make_kernel("gaussian", sigma=1.5)
+    k_sample, k_fold = jax.random.split(jax.random.PRNGKey(0))
+    fid = fold_ids(k_fold, x.shape[0], folds)
+    np.testing.assert_array_equal(res.fold_id, fid)
+    cs = UniformSampler(m=64).sample(k_sample, x, kern, backend="jnp")
+    m = int(cs.count)
+    centers, a_diag = x[cs.idx[:m]], cs.weight[:m]
+    for li, lam in enumerate(LAMS):
+        for f in range(folds):
+            model = falkon_fit(kern, x, y * (fid != f), centers, lam,
+                               a_diag=a_diag, iters=15, backend="jnp")
+            sel = fid == f
+            mse = float(jnp.sum((model.predict(x) - y) ** 2 * sel) / jnp.sum(sel))
+            got = float(res.scores[li, f])
+            assert abs(mse - got) < 1e-3 * max(1.0, abs(mse)), (li, f, mse, got)
+    assert res.best_lam == LAMS[res.best_index]
+    assert float(res.mean_scores[res.best_index]) == float(jnp.min(res.mean_scores))
+
+
+def test_kfold_sweep_rides_fused_cache():
+    """The whole lambda grid after the first fit is cache hits: fold count
+    fixes the k bucket, lam is traced, centers are warm-started."""
+    x, y = _sweep_problem(seed=7)
+    sweep = KFoldSweep(kernel="gaussian", sigma=1.5, sampler=UniformSampler(m=52),
+                       lams=LAMS, folds=4, iters=12, backend="jnp", seed=3)
+    res1 = sweep.run(x, y)
+    t0 = falkon_mod._FUSED_FIT_TRACES
+    res2 = sweep.run(x, y)  # same shapes end to end -> zero retraces
+    assert falkon_mod._FUSED_FIT_TRACES == t0
+    np.testing.assert_allclose(res1.scores, res2.scores, rtol=1e-6, atol=1e-7)
+
+
+def test_kfold_sweep_validates_inputs():
+    x, y = _sweep_problem(n=40)
+    with pytest.raises(ValueError, match="single-output"):
+        KFoldSweep(lams=(1e-3,)).run(x, jnp.stack([y, y], axis=1))
+    with pytest.raises(ValueError, match="folds"):
+        KFoldSweep(lams=(1e-3,), folds=1).run(x, y)
+
+
+def test_fold_ids_are_balanced():
+    from repro.api.sweep import fold_ids
+
+    fid = fold_ids(jax.random.PRNGKey(0), 103, 5)
+    sizes = [int(jnp.sum(fid == f)) for f in range(5)]
+    assert min(sizes) >= max(sizes) - 1 and sum(sizes) == 103
+
+
+def test_kfold_sweep_center_set_bypass():
+    """center_set= skips the sampler (e.g. one BLESS ladder shared across
+    sweeps) and is reused for every lambda."""
+    x, y = _sweep_problem(n=300)
+    kern = make_kernel("gaussian", sigma=1.5)
+    cs = UniformSampler(m=48).sample(jax.random.PRNGKey(5), x, kern, backend="jnp")
+    sweep = KFoldSweep(kernel=kern, lams=(1e-3, 1e-5), folds=3, iters=10,
+                       backend="jnp")
+    res = sweep.run(x, y, center_set=cs)
+    assert res.center_set is cs
+    assert res.scores.shape == (2, 3)

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs site (no third-party deps).
+
+Validates every ``[text](target)`` link in the given markdown files:
+
+  * relative file targets must exist (resolved against the file's directory);
+  * ``#fragment`` anchors must match a heading in the target file, using
+    GitHub's slug rules (lowercase, spaces -> '-', punctuation dropped);
+  * ``http(s)://`` / ``mailto:`` targets are skipped (CI has no network).
+
+Usage:  python tools/check_docs_links.py README.md DESIGN.md docs/*.md
+Exit status 0 when every link resolves, 1 with a per-link report otherwise.
+Used by the CI ``docs-check`` job and by tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target has no spaces/parens (our docs use plain targets);
+# images ![alt](src) are matched too (the leading ! is irrelevant here).
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase; spaces to '-'; drop everything that
+    is not alphanumeric, hyphen, or underscore (so '§2.4 Fused fit' ->
+    '24-fused-fit')."""
+    s = heading.strip().lower().replace(" ", "-")
+    return re.sub(r"[^0-9a-zÀ-￿_-]", "", s)
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    """All heading slugs of a markdown file, with GitHub's duplicate rule:
+    the first occurrence keeps the bare slug, the n-th gets ``-{n-1}``."""
+    text = _CODE_FENCE.sub("", path.read_text())
+    slugs: list[str] = []
+    seen: dict[str, int] = {}
+    for match in _HEADING.finditer(text):
+        base = github_slug(match.group(1))
+        n = seen.get(base, 0)
+        seen[base] = n + 1
+        slugs.append(base if n == 0 else f"{base}-{n}")
+    return set(slugs)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    """Return one error string per broken link in ``path``."""
+    errors: list[str] = []
+    text = _CODE_FENCE.sub("", path.read_text())
+    for match in _LINK.finditer(text):
+        target = match.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, fragment = target.partition("#")
+        dest = path if not file_part else (path.parent / file_part).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link -> {target} (no such file)")
+            continue
+        if fragment and dest.suffix == ".md":
+            if github_slug(fragment) not in anchors_of(dest):
+                errors.append(f"{path}: broken anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry point: check every argv path, print a report, 0/1 exit."""
+    if not argv:
+        print("usage: check_docs_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    for name in argv:
+        p = pathlib.Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(argv)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

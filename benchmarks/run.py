@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import (BlessRSampler, BlessSampler, FalkonRegressor, FitConfig,
-                       KFoldSweep, RecursiveRlsSampler, SqueakSampler,
-                       UniformSampler, make_kernel)
+from repro.api import (BlessRSampler, BlessSampler, ChenYangSampler,
+                       FalkonRegressor, FitConfig, KFoldSweep,
+                       RecursiveRlsSampler, SqueakSampler, UniformSampler,
+                       make_kernel)
 from repro.core import exact_rls, falkon_fit
 from repro.core.leverage import approx_rls_all
 
@@ -113,6 +114,7 @@ def bench_fig1_raccuracy(n: int = 2000, lam: float = 1e-3, backend=None) -> None
     mref = run("bless_r", BlessRSampler(lam=lam, q2=4.0))
     run("squeak", SqueakSampler(lam=lam, m_cap=mref))
     run("rrls", RecursiveRlsSampler(lam=lam, m_cap=mref))
+    run("chen_yang", ChenYangSampler(m=mref, lam=lam))
     run("uniform", UniformSampler(m=mref))
 
 

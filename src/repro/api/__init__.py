@@ -40,19 +40,22 @@ from .estimators import ExactKrr, FalkonRegressor, FitConfig, NystromRegressor
 from .samplers import (
     BlessRSampler,
     BlessSampler,
+    ChenYangSampler,
     ExactRlsSampler,
     RecursiveRlsSampler,
     Sampler,
     SqueakSampler,
     TwoPassSampler,
     UniformSampler,
+    as_prng_key,
 )
 from .sweep import KFoldResult, KFoldSweep
 
 __all__ = [
     # samplers (slot 1)
-    "Sampler", "BlessSampler", "BlessRSampler", "UniformSampler",
+    "Sampler", "as_prng_key", "BlessSampler", "BlessRSampler", "UniformSampler",
     "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
+    "ChenYangSampler",
     # estimators (slot 2)
     "FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr",
     # model selection (slot 3)

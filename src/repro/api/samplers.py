@@ -24,11 +24,30 @@ import jax
 import jax.numpy as jnp
 
 from ..core.baselines import recursive_rls, squeak, two_pass
-from ..core.bless import BlessResult, _multinomial, _pow2, bless, bless_r
+from ..core.bless import BlessResult, _bucket, _multinomial, bless, bless_r
+from ..core.chen_yang import fast_spectral_rls
 from ..core.gram import BackendLike, Kernel
 from ..core.leverage import CenterSet, exact_rls, uniform_center_set
+from ..core.sampling import gumbel_topk
 
 Array = jax.Array
+
+
+def as_prng_key(key) -> Array:
+    """Normalize every accepted seed spelling to one typed-key convention.
+
+    Accepts a Python int seed, a new-style typed key (``jax.random.key``),
+    or a legacy (2,) uint32 ``PRNGKey`` array; returns a typed key. Every
+    ``Sampler.sample`` funnels its key through this, so
+    ``sampler.sample(0, ...)``, ``sample(jax.random.key(0), ...)`` and
+    ``sample(jax.random.PRNGKey(0), ...)`` draw identical center sets.
+    """
+    if isinstance(key, int):
+        return jax.random.key(key)
+    key = jnp.asarray(key)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key
+    return jax.random.wrap_key_data(key.astype(jnp.uint32))
 
 
 @runtime_checkable
@@ -61,8 +80,9 @@ class BlessSampler:
     def ladder(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> BlessResult:
         """The full regularization path (every BlessLevel), for introspection."""
-        return bless(key, x, kernel, self.lam, q=self.q, q1=self.q1, q2=self.q2,
-                     lam0=self.lam0, t=self.t, m_cap=self.m_cap, backend=backend)
+        return bless(as_prng_key(key), x, kernel, self.lam, q=self.q, q1=self.q1,
+                     q2=self.q2, lam0=self.lam0, t=self.t, m_cap=self.m_cap,
+                     backend=backend)
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
@@ -84,7 +104,7 @@ class BlessRSampler:
     def ladder(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> BlessResult:
         """The full regularization path (every BlessLevel), for introspection."""
-        return bless_r(key, x, kernel, self.lam, q=self.q, q2=self.q2,
+        return bless_r(as_prng_key(key), x, kernel, self.lam, q=self.q, q2=self.q2,
                        lam0=self.lam0, t=self.t, m_cap=self.m_cap, backend=backend)
 
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
@@ -112,12 +132,13 @@ class UniformSampler:
         """Draw m uniform centers from x's rows (weights per ``weights``)."""
         if self.weights not in ("nystrom", "identity"):
             raise ValueError(f"weights must be 'nystrom' or 'identity', got {self.weights!r}")
+        key = as_prng_key(key)
         n = x.shape[0]
         if self.replace:
             idx = jax.random.randint(key, (self.m,), 0, n)
         else:
             idx = jax.random.choice(key, n, (self.m,), replace=False)
-        cs = uniform_center_set(idx, n, _pow2(self.m))  # owns the padding rules
+        cs = uniform_center_set(idx, n, _bucket(self.m))  # owns the padding rules
         if self.weights == "identity":
             cs = cs._replace(weight=jnp.ones_like(cs.weight))
         return cs
@@ -138,8 +159,8 @@ class ExactRlsSampler:
         """m i.i.d. draws from the exact Eq. 1 leverage distribution."""
         scores = exact_rls(kernel, x, self.lam)
         p = scores / jnp.sum(scores)
-        mbuf = _pow2(self.m)
-        pos = _multinomial(key, p, mbuf)
+        mbuf = _bucket(self.m)
+        pos = _multinomial(as_prng_key(key), p, mbuf)
         mask = jnp.arange(mbuf) < self.m
         return CenterSet(
             idx=pos.astype(jnp.int32),
@@ -168,7 +189,7 @@ class RecursiveRlsSampler:
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
         """Run RECURSIVE-RLS over the halving tree; returns its (J, A)."""
-        return recursive_rls(key, x, kernel, self.lam, q2=self.q2,
+        return recursive_rls(as_prng_key(key), x, kernel, self.lam, q2=self.q2,
                              depth=self.depth, m_cap=self.m_cap, backend=backend)
 
 
@@ -184,7 +205,7 @@ class SqueakSampler:
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
         """Run SQUEAK's streaming merge; returns its weighted (J, A)."""
-        return squeak(key, x, kernel, self.lam, qbar=self.qbar,
+        return squeak(as_prng_key(key), x, kernel, self.lam, qbar=self.qbar,
                       n_chunks=self.n_chunks, m_cap=self.m_cap, backend=backend)
 
 
@@ -199,11 +220,53 @@ class TwoPassSampler:
     def sample(self, key: Array, x: Array, kernel: Kernel, *,
                backend: BackendLike = None) -> CenterSet:
         """Pass 1: uniform pilot scores; pass 2: the m2 weighted draws."""
-        return two_pass(key, x, kernel, self.lam, m1=self.m1, m2=self.m2,
-                        backend=backend)
+        return two_pass(as_prng_key(key), x, kernel, self.lam, m1=self.m1,
+                        m2=self.m2, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChenYangSampler:
+    """Chen & Yang (2021) fast statistical leverage approximation.
+
+    One-shot spectral RLS estimate (``repro.core.chen_yang``): uniformly
+    sketch m0 landmark columns, eigendecompose twice, read every point's
+    score off the Nystrom factor — O(n m0^2), no ladder or rejection
+    rounds. The ``m`` centers are then drawn *without* replacement by
+    Gumbel-top-k proportionally to the estimated scores, with
+    inclusion-rate weights A_jj = min(m l^_j / sum l^, 1) (the Eq. 3
+    convention for without-replacement sets, as in BLESS-R).
+    """
+
+    m: int
+    lam: float = 1e-3
+    m0: int | None = None  # landmark count; None -> default_sketch_size(n)
+
+    def scores(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> Array:
+        """The (n,) spectral RLS estimates themselves, for introspection."""
+        return fast_spectral_rls(as_prng_key(key), kernel, x, self.lam,
+                                 m0=self.m0, backend=backend)
+
+    def sample(self, key: Array, x: Array, kernel: Kernel, *,
+               backend: BackendLike = None) -> CenterSet:
+        """Sketch, score, and draw m distinct centers ~ l^ (Gumbel-top-k)."""
+        k_sketch, k_draw = jax.random.split(as_prng_key(key))
+        s = fast_spectral_rls(k_sketch, kernel, x, self.lam, m0=self.m0,
+                              backend=backend)
+        sel = gumbel_topk(k_draw, s, self.m)
+        pi = jnp.minimum(self.m * s[sel] / jnp.sum(s), 1.0)
+        mbuf = _bucket(self.m)
+        pad = mbuf - self.m
+        return CenterSet(
+            idx=jnp.pad(sel, (0, pad)).astype(jnp.int32),
+            weight=jnp.pad(pi, (0, pad), constant_values=1.0).astype(jnp.float32),
+            mask=jnp.arange(mbuf) < self.m,
+            count=jnp.asarray(self.m, jnp.int32),
+        )
 
 
 __all__ = [
-    "Sampler", "BlessSampler", "BlessRSampler", "UniformSampler",
+    "Sampler", "as_prng_key", "BlessSampler", "BlessRSampler", "UniformSampler",
     "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
+    "ChenYangSampler",
 ]

@@ -35,6 +35,8 @@ from .leverage import (
 )
 from .bless import BlessLevel, BlessResult, bless, bless_r, lam_ladder, theory_constants
 from .baselines import recursive_rls, squeak, two_pass, uniform_centers
+from .chen_yang import default_sketch_size, fast_spectral_rls
+from .sampling import categorical, gumbel_topk
 from .falkon import (
     FalkonModel,
     Preconditioner,
@@ -56,6 +58,7 @@ __all__ = [
     "uniform_center_set",
     "BlessLevel", "BlessResult", "bless", "bless_r", "lam_ladder", "theory_constants",
     "recursive_rls", "squeak", "two_pass", "uniform_centers",
+    "categorical", "gumbel_topk", "default_sketch_size", "fast_spectral_rls",
     "FalkonModel", "Preconditioner", "cg", "falkon_bless_fit", "falkon_fit",
     "local_knm_quadratic", "local_knm_t", "make_preconditioner",
     "exact_krr", "nystrom_krr",

@@ -42,6 +42,7 @@ from jax.experimental.shard_map import shard_map
 from ..kernels.falkon_matvec import ops as falkon_ops
 from ..kernels.gram import ops as gram_ops
 from ..kernels.quadform import ops as quadform_ops
+from ..kernels.rls_score import ops as rls_ops
 from .gram import (Kernel, blocked_cross, get_family, kernel_family_names,
                    register_backend)
 from .leverage import _chol_with_jitter
@@ -122,6 +123,23 @@ class Backend:
         """
         raise NotImplementedError
 
+    def rls_scores(self, kernel: Kernel, x_cand: Array, z: Array,
+                   z_mask: Array, reg: Array, lamn: Array) -> Array:
+        """Eq. 3 scores  (K_ii - K_Ji^T (K_JJ + lam n A)^{-1} K_Ji) / (lam n)
+        for each candidate row — the BLESS ladder's per-level contraction.
+
+        ``z`` (Mbuf, d) padded centers, ``z_mask`` (Mbuf,) validity, ``reg``
+        (Mbuf,) the regularized diagonal (lam n A on valid slots, 1 on
+        padding), ``lamn`` the scalar lam * n. Returns (Rbuf,) fp32 scores
+        (unclipped, unmasked — the ladder applies its own floor/candidate
+        mask). The default composes ``masked_quadform`` with the family
+        diagonal; backends override it to fuse the whole chain (Pallas keeps
+        the (Rbuf, Mbuf) Gram tile in VMEM for its entire lifetime).
+        """
+        kdiag = kernel.diag(x_cand)
+        quad = self.masked_quadform(kernel, x_cand, z, z_mask, reg)
+        return (kdiag - quad) / lamn
+
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
         """Build the v -> K_nM^T (K_nM v) operator closure for CG.
 
@@ -162,6 +180,26 @@ class Backend:
 # ---------------------------------------------------------------------------
 
 
+def _quadform_from_chol(chol: Array, g: Array) -> Array:
+    """rowsum(solve(L, g^T)^2) — q_i = g_i^T (L L^T)^{-1} g_i.
+
+    Two algebraically identical strategies, picked by static shape: the
+    triangular solve streams g through trsm (O(R M^2) at trsm throughput),
+    while ``L^{-1}`` + GEMM pays one (M, M) triangular inversion to move the
+    O(R M^2) bulk onto the GEMM path (~3-4x the trsm rate on the target
+    container). Measured crossover: GEMM wins once R >= 3 M (inversion
+    amortized) and M <= 768 (inversion itself still cheap); trsm elsewhere.
+    """
+    r, m = g.shape[0], chol.shape[0]
+    if r >= 3 * m and m <= 768:
+        inv_l = jax.scipy.linalg.solve_triangular(
+            chol, jnp.eye(m, dtype=chol.dtype), lower=True)
+        v = g @ inv_l.T  # (R, M) GEMM: rows v_i = L^{-1} g_i
+        return jnp.sum(v * v, axis=1)
+    v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
+    return jnp.sum(v * v, axis=0)
+
+
 @dataclasses.dataclass(frozen=True)
 class JnpBackend(Backend):
     """Pure-jnp row-streaming backend (the numerical reference)."""
@@ -179,13 +217,13 @@ class JnpBackend(Backend):
 
     def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
                         mask: Array, reg: Array) -> Array:
-        """Eq. 3 quadratic form via a triangular solve on the padded K_JJ."""
+        """Eq. 3 quadratic form on the padded K_JJ; the solve strategy is
+        picked from the static (R, M) shape by ``_quadform_from_chol``."""
         m = mask.astype(z.dtype)
-        kjj = kernel.cross(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
-        g = kernel.cross(x_cand, z) * m[None, :]
+        kjj = kernel.cross_unfused(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+        g = kernel.cross_unfused(x_cand, z) * m[None, :]
         chol = _chol_with_jitter(kjj)
-        v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
-        return jnp.sum(v * v, axis=0)
+        return _quadform_from_chol(chol, g)
 
     def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
         """CG quadratic op over the jnp row streamer ((M,) or (M, k))."""
@@ -272,6 +310,25 @@ class PallasBackend(Backend):
         tbn, tbm = _pick(PALLAS_QUADFORM_TILES, max(g.shape))
         return quadform_ops.quadform(g, w, bn=bn or tbn, bm=bm or tbm,
                                      interpret=self.interpret, bf16=self.bf16)
+
+    def rls_scores(self, kernel: Kernel, x_cand: Array, z: Array,
+                   z_mask: Array, reg: Array, lamn: Array) -> Array:
+        """Eq. 3 scores through the fused ``rls_score`` kernel: gram tile ->
+        quadform -> score epilogue in one dispatch, the (Mbuf, Mbuf) inverse
+        and centers VMEM-resident across the candidate grid. Falls back to
+        the composed gram + quadform kernels past the VMEM budget."""
+        if z.shape[0] > rls_ops.MAX_FUSED_M:
+            return super().rls_scores(kernel, x_cand, z, z_mask, reg, lamn)
+        kind, sigma = _kernel_params(kernel)
+        m = z_mask.astype(x_cand.dtype)
+        kjj = self.gram_block(kernel, z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+        chol = _chol_with_jitter(kjj)
+        w = jax.scipy.linalg.cho_solve(
+            (chol, True), jnp.eye(kjj.shape[0], dtype=kjj.dtype))
+        bn = self.bn or _pick(PALLAS_QUADFORM_TILES,
+                              max(x_cand.shape[0], z.shape[0]))[0]
+        return rls_ops.rls_score(x_cand, z, w, m, lamn, sigma, kind=kind,
+                                 bn=bn, interpret=self.interpret, bf16=self.bf16)
 
     def _matvec_bn(self, n: int) -> int:
         return self.bn or _pick(PALLAS_MATVEC_BN, n)

@@ -21,7 +21,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .bless import _multinomial, _pow2
+from .bless import _bucket, _multinomial, _pow2  # noqa: F401 — _pow2 re-exported
 from .gram import BackendLike, Kernel, resolve_backend
 from .leverage import CenterSet, approx_rls, uniform_center_set
 
@@ -31,18 +31,25 @@ Array = jax.Array
 def uniform_centers(key: Array, n: int, m: int) -> CenterSet:
     """Uniform column sampling [5]; A = (M/n) I (see uniform_center_set)."""
     idx = jax.random.randint(key, (m,), 0, n)
-    return uniform_center_set(idx, n, _pow2(m))
+    return uniform_center_set(idx, n, _bucket(m))
 
 
 def _resample(key: Array, x: Array, u_idx: Array, u_mask: Array, centers: CenterSet,
-              kernel: Kernel, lam: float, m_out: int, n: int, backend) -> CenterSet:
-    """One leverage-score sampling round: L_{centers}(U, lam) -> J' (Eq. 5)."""
-    s = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam),
-                   backend=backend)
-    s = jnp.where(u_mask, s, 0.0)
+              kernel: Kernel, lam: float, m_out: int, n: int, backend,
+              scores: Array | None = None) -> CenterSet:
+    """One leverage-score sampling round: L_{centers}(U, lam) -> J' (Eq. 5).
+
+    ``scores`` short-circuits the Eq. 3 evaluation when the caller already
+    scored exactly these candidates against these centers at this lam
+    (RECURSIVE-RLS sizes m_out from the same scores it samples with).
+    """
+    if scores is None:
+        scores = approx_rls(kernel, x[u_idx], u_mask, x, centers, jnp.asarray(lam),
+                            backend=backend)
+    s = jnp.where(u_mask, scores, 0.0)
     p = s / jnp.maximum(jnp.sum(s), 1e-30)
     r_h = int(jnp.sum(u_mask))
-    mbuf = _pow2(m_out)
+    mbuf = _bucket(m_out)
     pos = _multinomial(key, p, mbuf)
     j_mask = jnp.arange(mbuf) < m_out
     w = jnp.where(j_mask, (r_h * m_out / n) * p[pos], 1.0)
@@ -63,8 +70,8 @@ def two_pass(key: Array, x: Array, kernel: Kernel, lam: float, *,
     m1 = m1 or min(n, int(math.ceil(kernel.kappa_sq / lam)))
     k1, k2 = jax.random.split(key)
     j1 = uniform_centers(k1, n, m1)
-    u_idx = jnp.arange(_pow2(n), dtype=jnp.int32) % n
-    u_mask = jnp.arange(_pow2(n)) < n
+    u_idx = jnp.arange(_bucket(n), dtype=jnp.int32) % n
+    u_mask = jnp.arange(_bucket(n)) < n
     return _resample(k2, x, u_idx, u_mask, j1, kernel, lam, m2, n, backend)
 
 
@@ -79,20 +86,23 @@ def recursive_rls(key: Array, x: Array, kernel: Kernel, lam: float, *,
     depth = depth or max(1, int(math.log2(max(2, n * lam))))
     perm = jax.random.permutation(key, n).astype(jnp.int32)
     sizes = [max(8, n // 2**(depth - h)) for h in range(depth)] + [n]
-    j = uniform_center_set(perm[: sizes[0]], n, _pow2(sizes[0]))
+    j = uniform_center_set(perm[: sizes[0]], n, _bucket(sizes[0]))
     for h, r in enumerate(sizes[1:]):
         key, kh = jax.random.split(key)
-        rbuf = _pow2(r)
+        rbuf = _bucket(r)
         u_idx = perm[jnp.arange(rbuf) % n][: rbuf]
         u_mask = jnp.arange(rbuf) < r
-        # m_out ~ q2 * estimated d_eff from current scores
+        # m_out ~ q2 * estimated d_eff from current scores; the same scores
+        # feed the sampling round below (one Eq. 3 evaluation per level, not
+        # two — d_est and the draw see identical candidates/centers/lam)
         s = approx_rls(kernel, x[u_idx], u_mask, x, j, jnp.asarray(lam),
                        backend=backend)
         d_est = float(n / r * jnp.sum(jnp.where(u_mask, s, 0.0)))
         m_out = max(8, int(math.ceil(q2 * d_est)))
         if m_cap is not None:
             m_out = min(m_out, m_cap)
-        j = _resample(kh, x, u_idx, u_mask, j, kernel, lam, m_out, n, backend)
+        j = _resample(kh, x, u_idx, u_mask, j, kernel, lam, m_out, n, backend,
+                      scores=s)
     return j
 
 
@@ -113,7 +123,7 @@ def squeak(key: Array, x: Array, kernel: Kernel, lam: float, *,
         u_new = perm[h * chunk: (h + 1) * chunk]
         cand = jnp.concatenate([j_idx, u_new])
         cand_w = jnp.concatenate([j_w, jnp.full((u_new.shape[0],), (cand.shape[0]) / n, jnp.float32)])
-        cbuf = _pow2(cand.shape[0])
+        cbuf = _bucket(cand.shape[0])
         pad = cbuf - cand.shape[0]
         cs = CenterSet(
             idx=jnp.pad(cand, (0, pad)),
@@ -132,7 +142,7 @@ def squeak(key: Array, x: Array, kernel: Kernel, lam: float, *,
         order = jnp.argsort(sel)[: int(jnp.sum(keep))]
         j_idx = cs.idx[order]
         j_w = p[order]  # importance weight: kept w.p. p -> A_jj = p_j
-    mbuf = _pow2(j_idx.shape[0])
+    mbuf = _bucket(j_idx.shape[0])
     pad = mbuf - j_idx.shape[0]
     return CenterSet(
         idx=jnp.pad(j_idx, (0, pad)),

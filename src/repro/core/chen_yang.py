@@ -1,0 +1,89 @@
+"""Fast statistical leverage approximation (Chen & Yang, 2021).
+
+One-shot spectral estimate of the ridge leverage scores: uniformly
+subsample m0 landmark columns S, eigendecompose the (m0, m0) landmark Gram,
+and read every point's score off the Nystrom factor
+
+    C = K_nS V diag(mu)^{-1/2},        K_SS = V diag(mu) V^T,
+    C^T C = U diag(s) U^T,
+    l^_i  = sum_j (C U)_ij^2 / (s_j + lam n).
+
+(The Nystrom approximation K^ = C C^T has eigenpairs (s_j, C U_j s_j^{-1/2}),
+so the sum is exactly [K^ (K^ + lam n I)^{-1}]_ii.) Total cost O(n m0^2 +
+m0^3) with two small eigh's — no ladder, no rejection rounds. Compared to
+BLESS it trades the multiplicative (1 +- t) guarantee for a single
+fixed-size sketch; it shines as a scorer when one pass over the data is all
+the budget allows.
+
+Both Gram blocks go through the kernel-operator ``Backend`` seam, so the
+estimator runs on the jnp / Pallas / shard_map paths like every other
+scorer. Exposed to users as ``repro.api.ChenYangSampler``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gram import BackendLike, Kernel, resolve_backend
+from .leverage import _SCORE_FLOOR
+
+Array = jax.Array
+
+
+def default_sketch_size(n: int) -> int:
+    """Landmark count heuristic: ~4 sqrt(n), floored at 64, capped at n."""
+    return min(n, max(64, 4 * int(math.ceil(math.sqrt(n)))))
+
+
+def _fast_spectral_rls_impl(kernel, x, sel, lam, *, backend):
+    n = x.shape[0]
+    xs = x[sel]
+    kss = backend.gram_block(kernel, xs, xs).astype(jnp.float32)
+    mu, v = jnp.linalg.eigh(kss)
+    # floor the landmark spectrum: near-null directions of K_SS carry no
+    # signal and would otherwise blow up the whitening mu^{-1/2}
+    mu = jnp.maximum(mu, 1e-6 * jnp.maximum(jnp.max(mu), 1.0))
+    kns = backend.gram_block(kernel, x, xs).astype(jnp.float32)
+    c = kns @ (v / jnp.sqrt(mu)[None, :])
+    s, u = jnp.linalg.eigh(c.T @ c)
+    cu = c @ u
+    scores = jnp.sum(cu * cu / (jnp.maximum(s, 0.0) + lam * n)[None, :], axis=1)
+    return jnp.clip(scores, _SCORE_FLOOR, 1.0)
+
+
+_fast_spectral_rls = partial(jax.jit,
+                             static_argnames=("backend",))(_fast_spectral_rls_impl)
+
+
+def fast_spectral_rls(
+    key: Array,
+    kernel: Kernel,
+    x: Array,
+    lam: float,
+    *,
+    m0: int | None = None,
+    backend: BackendLike = None,
+) -> Array:
+    """Chen & Yang's one-shot spectral RLS estimate for every point.
+
+    Args:
+      key: PRNG key (drives the uniform landmark subsample).
+      kernel: bounded PSD kernel.
+      x: (n, d) dataset.
+      lam: regularization (the paper's lambda).
+      m0: landmark count; default ``default_sketch_size(n)``.
+      backend: kernel-operator backend (instance, registry name, or None
+        for the platform heuristic).
+
+    Returns:
+      (n,) fp32 scores in [_SCORE_FLOOR, 1].
+    """
+    n = x.shape[0]
+    backend = resolve_backend(backend, n=n)
+    m0 = default_sketch_size(n) if m0 is None else min(n, int(m0))
+    sel = jax.random.permutation(key, n)[:m0].astype(jnp.int32)
+    fn = _fast_spectral_rls if backend.jit_safe else _fast_spectral_rls_impl
+    return fn(kernel, x, sel, jnp.asarray(lam, jnp.float32), backend=backend)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..families import (  # noqa: F401 — re-exported public API
     KernelFamily,
+    diag_pre,
     get_family,
     kernel_family_names,
     register_kernel_family,
@@ -77,16 +78,49 @@ class Kernel:
             return fam.epilogue(x @ z.T, fam.inv_scale(self.sigma))
         return fam.epilogue(sq_dists(x, z), fam.inv_scale(self.sigma))
 
+    def cross_unfused(self, x: jax.Array, z: jax.Array) -> jax.Array:
+        """``cross`` with the epilogue kept out of the XLA:CPU broadcast
+        fusion (see ``_apply_epilogue``) — elementwise-identical, much
+        faster for exp-based families on CPU. The extra ``lax.map`` level
+        makes it unsafe inside deeply nested control flow (e.g. the CG
+        while-loop), so hot *leaf* contractions opt in explicitly."""
+        fam = self.family
+        pre = x @ z.T if fam.dot_only else sq_dists(x, z)
+        return _apply_epilogue(fam, pre, fam.inv_scale(self.sigma))
+
     def diag(self, x: jax.Array) -> jax.Array:
         """``k(x_i, x_i)`` of shape (n,)."""
         fam = self.family
         if fam.unit_diag:
             return jnp.ones((x.shape[0],), x.dtype)
-        pre = jnp.sum(x * x, axis=-1) if fam.dot_only else jnp.zeros((x.shape[0],), x.dtype)
-        return fam.epilogue(pre, fam.inv_scale(self.sigma))
+        return fam.epilogue(diag_pre(fam, x), fam.inv_scale(self.sigma))
 
     def gram(self, x: jax.Array) -> jax.Array:
         return self.cross(x, x)
+
+
+_EPILOGUE_BLOCKS = 8
+
+
+def _apply_epilogue(fam: KernelFamily, pre: jax.Array, c) -> jax.Array:
+    """Apply a family epilogue to a Gram pre-activation block.
+
+    On CPU the epilogue goes through a ``lax.map`` over row blocks rather
+    than straight elementwise application: XLA:CPU fuses the epilogue into
+    the distance broadcast loop and then emits *scalar* transcendental
+    calls (~4x the whole block's cost for exp-based families); the loop
+    body boundary keeps the epilogue a standalone op, which lowers to the
+    vectorized libm kernels. Elementwise results are identical. Other
+    platforms (and shapes the block count doesn't divide) take the plain
+    fused path.
+    """
+    n = pre.shape[0] if pre.ndim == 2 else 0
+    if (jax.default_backend() != "cpu" or n < 512
+            or n % _EPILOGUE_BLOCKS != 0):
+        return fam.epilogue(pre, c)
+    nb = _EPILOGUE_BLOCKS
+    blocks = pre.reshape(nb, n // nb, pre.shape[1])
+    return jax.lax.map(lambda b: fam.epilogue(b, c), blocks).reshape(pre.shape)
 
 
 def sq_dists(x: jax.Array, z: jax.Array) -> jax.Array:
@@ -172,9 +206,9 @@ def blocked_cross(kernel: Kernel, x: jax.Array, z: jax.Array, *, block: int = 40
     """
     n = x.shape[0]
     if n <= block:
-        return kernel.cross(x, z)
+        return kernel.cross_unfused(x, z)
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     xb = xp.reshape(-1, block, x.shape[1])
-    out = jax.lax.map(lambda xi: kernel.cross(xi, z), xb)
+    out = jax.lax.map(lambda xi: kernel.cross_unfused(xi, z), xb)
     return out.reshape(-1, z.shape[0])[:n]

@@ -96,15 +96,13 @@ def _approx_rls_traced(kernel, x_cand, cand_mask, x_all, centers, lam, backend):
     """One jitted Eq. 3 scorer for jit-safe backends (bounded retrace set)."""
     n = x_all.shape[0]
     z = x_all[centers.idx]  # (Mbuf, d)
-    kdiag = kernel.diag(x_cand)
 
     def no_centers(_):
-        return kdiag / (lam * n)
+        return kernel.diag(x_cand) / (lam * n)
 
     def with_centers(_):
         reg = jnp.where(centers.mask, lam * n * centers.weight, 1.0)
-        quad = backend.masked_quadform(kernel, x_cand, z, centers.mask, reg)
-        return (kdiag - quad) / (lam * n)
+        return backend.rls_scores(kernel, x_cand, z, centers.mask, reg, lam * n)
 
     scores = jax.lax.cond(centers.count > 0, with_centers, no_centers, None)
     scores = jnp.clip(scores, _SCORE_FLOOR, 1.0)
@@ -115,14 +113,12 @@ def _approx_rls_host(backend, kernel, x_cand, cand_mask, x_all, centers, lam):
     """Host-driven Eq. 3 for backends whose dispatch needs concrete values
     (Pallas tile params, shard_map staging). Same math as the traced path."""
     n = x_all.shape[0]
-    kdiag = kernel.diag(x_cand)
     if int(centers.count) > 0:
         z = x_all[centers.idx]
         reg = jnp.where(centers.mask, lam * n * centers.weight, 1.0)
-        quad = backend.masked_quadform(kernel, x_cand, z, centers.mask, reg)
-        scores = (kdiag - quad) / (lam * n)
+        scores = backend.rls_scores(kernel, x_cand, z, centers.mask, reg, lam * n)
     else:
-        scores = kdiag / (lam * n)
+        scores = kernel.diag(x_cand) / (lam * n)
     scores = jnp.clip(scores, _SCORE_FLOOR, 1.0)
     return jnp.where(cand_mask, scores, _SCORE_FLOOR)
 
@@ -187,12 +183,23 @@ def uniform_center_set(idx: jax.Array, n: int, mbuf: int) -> CenterSet:
 
 
 def _chol_with_jitter(a: jax.Array) -> jax.Array:
-    """Cholesky with a trace-scaled jitter retry for fp32 robustness."""
+    """Cholesky with a trace-scaled jitter retry for fp32 robustness.
+
+    The retry lives under ``lax.cond`` so the second factorization is only
+    *computed* when the first produced NaNs — the common path pays one
+    Cholesky, not two. (Safe here: the blocked scorers map over rows with
+    ``lax.map``/scan, not vmap, so the cond never degrades to a select.)
+    """
     eps = 1e-6 * jnp.mean(jnp.diagonal(a))
-    chol = jnp.linalg.cholesky(a + eps * jnp.eye(a.shape[0], dtype=a.dtype))
+    eye = jnp.eye(a.shape[0], dtype=a.dtype)
+    chol = jnp.linalg.cholesky(a + eps * eye)
     bad = jnp.any(jnp.isnan(chol))
-    chol2 = jnp.linalg.cholesky(a + (1e3 * eps) * jnp.eye(a.shape[0], dtype=a.dtype))
-    return jnp.where(bad, chol2, chol)
+    return jax.lax.cond(
+        bad,
+        lambda _: jnp.linalg.cholesky(a + (1e3 * eps) * eye),
+        lambda _: chol,
+        None,
+    )
 
 
 def _psd_solve(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -1,0 +1,61 @@
+"""Jitted sampling primitives for the fused BLESS ladder.
+
+Two draw schemes cover every sampler in the repo:
+
+  * ``categorical`` — M i.i.d. with-replacement draws from an (unnormalized)
+    weight vector, via inverse-CDF on sorted uniforms. This is BLESS Alg. 1
+    line 9 (Multinomial(P_h, U_h)): the paper samples *with* replacement, so
+    a Gumbel-top-k is the wrong distribution here (top-k is without
+    replacement) and the per-draw Gumbel-argmax equivalent would need
+    M x R noise values where inverse-CDF needs M uniforms. DESIGN.md §8
+    spells out the semantics.
+  * ``gumbel_topk`` — weighted sampling *without* replacement by the Gumbel
+    trick: argtop-k of ``log w_i + G_i`` with i.i.d. standard Gumbel noise
+    draws k distinct indices with the successive-conditional probabilities
+    of weighted sampling without replacement. One (R,) noise vector, fully
+    jittable, no host round trip.
+
+Both take raw (>= 0) weights, mask invalid slots via ``-inf`` logits, and
+are deterministic given the key, so cross-backend center-set parity
+(tests/test_backend.py) reduces to fp-closeness of the score vectors.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_WEIGHT_FLOOR = 1e-30  # keeps the CDF strictly increasing on valid slots
+
+
+@partial(jax.jit, static_argnames=("m",))
+def categorical(key: Array, weights: Array, m: int) -> Array:
+    """``m`` i.i.d. draws from ``p = weights / sum(weights)`` (inverse-CDF).
+
+    ``weights`` (R,) are unnormalized and may contain exact zeros (padded
+    slots); zero-mass cells are never selected. Returns (m,) int32 indices
+    into the weight buffer.
+    """
+    cdf = jnp.cumsum(jnp.maximum(weights, 0.0))
+    cdf = cdf / jnp.maximum(cdf[-1], _WEIGHT_FLOOR)
+    u = jax.random.uniform(key, (m,))
+    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def gumbel_topk(key: Array, weights: Array, k: int) -> Array:
+    """Weighted sampling of ``k`` distinct indices without replacement.
+
+    Perturbs ``log weights`` with i.i.d. Gumbel noise and takes the top-k
+    (the Gumbel-max trick); slots with weight <= 0 get ``-inf`` logits and
+    are only drawn if fewer than ``k`` valid slots exist. Returns (k,)
+    int32 indices, descending by perturbed logit.
+    """
+    logw = jnp.where(weights > 0.0, jnp.log(jnp.maximum(weights, _WEIGHT_FLOOR)),
+                     -jnp.inf)
+    g = jax.random.gumbel(key, logw.shape)
+    _, idx = jax.lax.top_k(logw + g, k)
+    return idx.astype(jnp.int32)

@@ -88,6 +88,16 @@ def get_family(name: str) -> KernelFamily:
         ) from None
 
 
+def diag_pre(family: KernelFamily, x: Array) -> Array:
+    """Epilogue pre-activation for k(x_i, x_i): 0 for distance families,
+    ``x . x`` for dot-product ones. One definition shared by ``Kernel.diag``
+    and the fused RLS-score kernel wrapper, so every path that needs the
+    Eq. 3 ``K_ii`` term agrees bit-for-bit on what the diagonal is."""
+    if family.dot_only:
+        return jnp.sum(x * x, axis=-1)
+    return jnp.zeros((x.shape[0],), x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Built-in families. Epilogues are elementwise-only by contract; the +1e-30
 # under the sqrt keeps the laplacian/matern gradient finite at d2 == 0 and is

@@ -1,0 +1,6 @@
+"""Fused Pallas RLS-score kernel (gram tile -> quadform -> Eq. 3 score)."""
+from .ops import MAX_FUSED_M, rls_score, rls_score_reference
+from .ref import masked_quadform_ref, rls_score_ref
+
+__all__ = ["MAX_FUSED_M", "rls_score", "rls_score_reference",
+           "masked_quadform_ref", "rls_score_ref"]

@@ -1,0 +1,56 @@
+"""Public wrapper for the fused RLS-score kernel: padding + diag plumbing.
+
+Zero-padding is exact end to end: padded candidate rows produce garbage
+scores that the caller masks; padded center columns are zeroed by the mask
+inside the kernel before the quadform, and the padded block of W is the
+identity (reg = 1 on invalid slots) so it contributes nothing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...families import diag_pre, get_family
+from ..common import default_interpret, pad_dim, round_up
+from .ref import rls_score_ref
+from .rls_score import rls_score_pallas
+
+#: Largest center buffer the fused kernel keeps resident in VMEM (W is
+#: (M, M) fp32 -> 4 MB at 1024; beyond that the backend composes the
+#: separate gram + quadform kernels instead).
+MAX_FUSED_M = 1024
+
+
+def rls_score(x_cand: jax.Array, z: jax.Array, w: jax.Array, zmask: jax.Array,
+              lamn: jax.Array, sigma: float, *, kind: str = "gaussian",
+              bn: int = 256, interpret: bool | None = None,
+              bf16: bool = False) -> jax.Array:
+    """Eq. 3 scores (K_ii - g_i^T W g_i) / (lam n) for each candidate row.
+
+    x_cand (R, d), z (M, d) padded centers, w (M, M) the inverse of the
+    regularized K_JJ, zmask (M,) center validity, lamn the scalar lam * n.
+    Arbitrary R/M/d; pads internally to (bn, 128, 128). Returns (R,) fp32.
+    """
+    fam = get_family(kind)
+    inv_scale = float(fam.inv_scale(sigma))
+    n, d = x_cand.shape
+    m = z.shape[0]
+    interpret = default_interpret() if interpret is None else interpret
+    kdiag = fam.epilogue(diag_pre(fam, x_cand), inv_scale).astype(jnp.float32)
+    mpad = round_up(m, 128)
+    xp = pad_dim(pad_dim(x_cand, 0, round_up(n, bn)), 1, round_up(d, 128))
+    zp = pad_dim(pad_dim(z, 0, mpad), 1, round_up(d, 128))
+    # padded W block = identity (matches the reg = 1 invalid-slot convention)
+    wp = pad_dim(pad_dim(w, 0, mpad), 1, mpad)
+    if mpad > m:
+        eye_tail = (jnp.arange(mpad) >= m).astype(wp.dtype)
+        wp = wp + jnp.diag(eye_tail)
+    maskp = pad_dim(zmask.astype(jnp.float32), 0, mpad)
+    kdp = pad_dim(kdiag, 0, round_up(n, bn))
+    lamn2 = jnp.asarray(lamn, jnp.float32).reshape(1, 1)
+    out = rls_score_pallas(xp, zp, wp, maskp, kdp, lamn2, inv_scale, kind=kind,
+                           bn=bn, interpret=interpret, bf16=bf16)
+    return out[:n]
+
+
+rls_score_reference = rls_score_ref

@@ -1,0 +1,44 @@
+"""Pre-fusion reference for the fused RLS-score path.
+
+This is the Eq. 3 scorer exactly as the pre-fusion ladder computed it — a
+masked Gram block, a jittered Cholesky of the padded ``K_JJ + lam n A``, a
+triangular solve, and the ``(K_ii - q_i) / (lam n)`` epilogue as separate
+ops. The ladder-level parity suite (tests/test_rls_score.py) holds every
+fused backend path to this oracle across all registered kernel families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _chol_jittered(a: jax.Array) -> jax.Array:
+    """Eager double-jitter Cholesky (the pre-fusion _chol_with_jitter)."""
+    eps = 1e-6 * jnp.mean(jnp.diagonal(a))
+    chol = jnp.linalg.cholesky(a + eps * jnp.eye(a.shape[0], dtype=a.dtype))
+    bad = jnp.any(jnp.isnan(chol))
+    chol2 = jnp.linalg.cholesky(a + (1e3 * eps) * jnp.eye(a.shape[0], dtype=a.dtype))
+    return jnp.where(bad, chol2, chol)
+
+
+def masked_quadform_ref(kernel, x_cand: jax.Array, z: jax.Array, mask: jax.Array,
+                        reg: jax.Array) -> jax.Array:
+    """q_i = K_Ji^T (K_JJ ∘ mask + diag(reg))^{-1} K_Ji, via one trsm."""
+    m = mask.astype(z.dtype)
+    kjj = kernel.cross(z, z) * (m[:, None] * m[None, :]) + jnp.diag(reg)
+    g = kernel.cross(x_cand, z) * m[None, :]
+    chol = _chol_jittered(kjj)
+    v = jax.scipy.linalg.solve_triangular(chol, g.T, lower=True)
+    return jnp.sum(v * v, axis=0)
+
+
+def rls_score_ref(kernel, x_cand: jax.Array, z: jax.Array, mask: jax.Array,
+                  reg: jax.Array, lamn: jax.Array) -> jax.Array:
+    """Eq. 3 scores  (K_ii - q_i) / (lam n)  — unclipped, unmasked.
+
+    ``z`` (Mbuf, d) padded centers, ``mask`` (Mbuf,) validity, ``reg``
+    (Mbuf,) the regularized diagonal (lam n A on valid slots, 1 on padding),
+    ``lamn`` the scalar lam * n. Returns (Rbuf,) fp32.
+    """
+    kdiag = kernel.diag(x_cand)
+    return (kdiag - masked_quadform_ref(kernel, x_cand, z, mask, reg)) / lamn

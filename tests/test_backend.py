@@ -192,11 +192,14 @@ def test_bless_center_sets_match_jnp(name):
     res = bless(jax.random.PRNGKey(0), x, KERN, 1e-3, backend=name)
     assert [lvl.m_h for lvl in res.levels] == [lvl.m_h for lvl in ref.levels]
     assert bool(jnp.all(res.final.centers.idx == ref.final.centers.idx))
+    # 5e-4: the internal center dedup merges duplicate regularizers (harmonic
+    # sum), which mildly worsens the (M, M) conditioning the backends' fp32
+    # solves amplify — center identity above is still required to be exact
     np.testing.assert_allclose(res.final.centers.weight, ref.final.centers.weight,
-                               rtol=1e-4, atol=1e-5)
+                               rtol=5e-4, atol=5e-5)
     s_ref = approx_rls_all(KERN, x, ref.final.centers, jnp.asarray(1e-3), backend="jnp")
     s = approx_rls_all(KERN, x, ref.final.centers, jnp.asarray(1e-3), backend=name)
-    np.testing.assert_allclose(s, s_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s, s_ref, rtol=5e-4, atol=5e-5)
 
 
 @pytest.mark.parametrize("name", ["pallas", "sharded"])

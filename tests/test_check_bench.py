@@ -1,0 +1,110 @@
+"""Unit tests for the CI perf-regression gate (tools/check_bench.py)."""
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_TOOLS = Path(__file__).resolve().parent.parent / "tools"
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", _TOOLS / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+BASE = {"a": 900.0, "b": 48_000.0, "c": 190_000.0,
+        "d": 80_000.0, "e": 120_000.0}
+
+
+def test_clean_run_passes():
+    cur = {k: v * 1.05 for k, v in BASE.items()}
+    ok, lines = check_bench.compare(cur, BASE)
+    assert ok, "\n".join(lines)
+
+
+def test_single_row_regression_fails_row_gate():
+    cur = dict(BASE)
+    cur["c"] = BASE["c"] * 5
+    ok, lines = check_bench.compare(cur, BASE)
+    assert not ok
+    assert any("FAIL: row c" in ln for ln in lines)
+
+
+def test_uniform_slowdown_fails_median_gate():
+    cur = {k: v * 3.0 for k, v in BASE.items()}
+    ok, lines = check_bench.compare(cur, BASE)
+    assert not ok
+    assert any("FAIL: median ratio" in ln for ln in lines)
+
+
+def test_slow_runner_spread_is_tolerated():
+    """A uniformly 1.4x-slower runner is machine spread, not a regression."""
+    cur = {k: v * 1.4 for k, v in BASE.items()}
+    ok, lines = check_bench.compare(cur, BASE)
+    assert ok, "\n".join(lines)
+
+
+def test_jitter_floor_skips_tiny_rows():
+    cur = dict(BASE)
+    cur["a"] = BASE["a"] * 50  # 45ms — but 'a' is sub-floor on baseline? no:
+    # both sides must be sub-floor to skip; 45ms current crosses the floor.
+    ok, lines = check_bench.compare(cur, BASE)
+    assert not ok
+    cur["a"] = BASE["a"] * 3  # 2.7ms: both sides under the 5ms floor -> skip
+    ok, lines = check_bench.compare(cur, BASE)
+    assert ok, "\n".join(lines)
+    assert any("skipped 1 sub-floor" in ln for ln in lines)
+
+
+def test_disjoint_rows_fail():
+    ok, lines = check_bench.compare({"x": 1.0}, BASE)
+    assert not ok
+    assert any("no shared rows" in ln for ln in lines)
+
+
+def test_absolute_mode_gates_raw_ratios():
+    cur = {k: v * 2.0 for k, v in BASE.items()}
+    ok, _ = check_bench.compare(cur, BASE, mode="absolute", row_max=1.5,
+                                median_max=10.0)
+    assert not ok
+    ok, _ = check_bench.compare(cur, BASE, mode="normalized", row_max=1.5,
+                                median_max=10.0)
+    assert ok
+
+
+def test_find_baseline_picks_newest_pr(tmp_path):
+    for name, rows in [("BENCH_PR4.json", [{"name": "a", "us_per_call": 1}]),
+                       ("BENCH_PR6.json", [{"name": "a", "us_per_call": 2}]),
+                       ("BENCH_PR6_SMOKE.json",
+                        [{"name": "a", "us_per_call": 3}])]:
+        (tmp_path / name).write_text(json.dumps(rows))
+    assert check_bench.find_baseline(tmp_path).name == "BENCH_PR6.json"
+    assert check_bench.find_baseline(
+        tmp_path, smoke=True).name == "BENCH_PR6_SMOKE.json"
+    with pytest.raises(FileNotFoundError):
+        check_bench.find_baseline(tmp_path / "nowhere")
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    base = [{"name": k, "us_per_call": v, "derived": ""}
+            for k, v in BASE.items()]
+    cur = [{"name": k, "us_per_call": v * 1.1, "derived": ""}
+           for k, v in BASE.items()]
+    bpath, cpath = tmp_path / "base.json", tmp_path / "cur.json"
+    bpath.write_text(json.dumps(base))
+    cpath.write_text(json.dumps(cur))
+    report = tmp_path / "diff.txt"
+    rc = check_bench.main([str(cpath), "--baseline", str(bpath),
+                           "--report", str(report)])
+    assert rc == 0
+    assert "OK: within regression bounds" in report.read_text()
+    cur[2]["us_per_call"] = BASE["c"] * 9
+    cpath.write_text(json.dumps(cur))
+    rc = check_bench.main([str(cpath), "--baseline", str(bpath)])
+    assert rc == 1
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff a fresh benchmark JSON against the checked-in
+baseline trajectory.
+
+Usage (CI, after the bench-smoke run):
+
+    python tools/check_bench.py bench_smoke.json --smoke --report diff.md
+
+Compares every row shared by the two files and fails (exit 1) when either
+
+  * the **median** of the per-row ratios exceeds ``--median-max`` (broad
+    slowdown), or
+  * any single row's ratio exceeds ``--row-max`` (one subsystem regressed;
+    sized to tolerate the documented run-to-run bounce of the noisiest
+    rows).
+
+Two comparison modes:
+
+  * ``normalized`` (default, what CI uses): the runner-speed difference
+    between the machine that recorded the baseline and the CI runner is
+    estimated as the **median of the per-row ratios** (robust while fewer
+    than half the rows regress), and each row is gated on its ratio
+    divided by that estimate. The median gate still applies to the *raw*
+    median ratio, so a broad slowdown across every row is caught too —
+    set ``--median-max`` loose enough to absorb the expected runner
+    spread.
+  * ``absolute``: per-row gates use the raw microsecond ratios; only
+    meaningful when baseline and current were recorded on comparable
+    machines (local use).
+
+Rows where both sides are below ``--abs-floor-us`` are skipped: timings
+that small are dispatch-jitter, not signal.
+
+The baseline is the newest ``BENCH_PR*.json`` in the repo root (or
+``BENCH_PR*_SMOKE.json`` with ``--smoke``, matching the smoke-sized rows
+the CI bench job produces); ``--baseline`` overrides the search.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import statistics
+import sys
+from pathlib import Path
+
+_BASELINE_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+_BASELINE_SMOKE_RE = re.compile(r"BENCH_PR(\d+)_SMOKE\.json$")
+
+
+def load_rows(path: str | Path) -> dict[str, float]:
+    """name -> us_per_call from a benchmarks/run.py --json file."""
+    with open(path) as f:
+        records = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in records}
+
+
+def find_baseline(root: str | Path = ".", *, smoke: bool = False) -> Path:
+    """Newest BENCH_PR<k>[_SMOKE].json by PR number (not mtime: checkouts
+    do not preserve it)."""
+    rx = _BASELINE_SMOKE_RE if smoke else _BASELINE_RE
+    best: tuple[int, Path] | None = None
+    for p in Path(root).glob("BENCH_PR*.json"):
+        m = rx.search(p.name)
+        if m and (best is None or int(m.group(1)) > best[0]):
+            best = (int(m.group(1)), p)
+    if best is None:
+        kind = "BENCH_PR*_SMOKE.json" if smoke else "BENCH_PR*.json"
+        raise FileNotFoundError(f"no {kind} baseline found under {root!r}")
+    return best[1]
+
+
+def compare(
+    current: dict[str, float],
+    baseline: dict[str, float],
+    *,
+    mode: str = "normalized",
+    median_max: float = 1.6,
+    row_max: float = 3.0,
+    abs_floor_us: float = 5000.0,
+) -> tuple[bool, list[str]]:
+    """Return (ok, report_lines). ``ok`` is False on any gate violation."""
+    common = sorted(set(current) & set(baseline))
+    lines = [
+        f"mode={mode} median_max={median_max} row_max={row_max} "
+        f"abs_floor_us={abs_floor_us:g}",
+        f"{len(common)} shared rows "
+        f"({len(current) - len(common)} only-current, "
+        f"{len(baseline) - len(common)} only-baseline)",
+    ]
+    if not common:
+        lines.append("FAIL: no shared rows between current and baseline")
+        return False, lines
+
+    kept = [n for n in common
+            if max(current[n], baseline[n]) >= abs_floor_us]
+    skipped = [n for n in common if n not in kept]
+    if skipped:
+        lines.append(f"skipped {len(skipped)} sub-floor rows: "
+                     + ", ".join(skipped))
+    if not kept:
+        lines.append("OK: every shared row is below the jitter floor")
+        return True, lines
+
+    raw = {n: current[n] / baseline[n] for n in kept}
+    med = statistics.median(raw.values())
+    scale = med if mode == "normalized" else 1.0
+    gated = {n: r / scale for n, r in raw.items()}
+
+    lines.append(f"{'row':40s} {'base_us':>12s} {'cur_us':>12s} "
+                 f"{'abs_ratio':>10s} {'gated':>10s}")
+    for n in kept:
+        lines.append(f"{n:40s} {baseline[n]:12.1f} {current[n]:12.1f} "
+                     f"{raw[n]:10.2f} {gated[n]:10.2f}")
+
+    ok = True
+    lines.append(f"median raw ratio: {med:.3f} (max {median_max})")
+    if med > median_max:
+        lines.append(f"FAIL: median ratio {med:.3f} > {median_max}")
+        ok = False
+    worst_name = max(gated, key=gated.get)
+    worst = gated[worst_name]
+    lines.append(f"worst gated row: {worst_name} at {worst:.3f} "
+                 f"(max {row_max})")
+    if worst > row_max:
+        lines.append(f"FAIL: row {worst_name} ratio {worst:.3f} > {row_max}")
+        ok = False
+    if ok:
+        lines.append("OK: within regression bounds")
+    return ok, lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("current", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: newest BENCH_PR*.json)")
+    ap.add_argument("--root", default=Path(__file__).resolve().parent.parent,
+                    help="where to search for the baseline (repo root)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="baseline search targets BENCH_PR*_SMOKE.json "
+                         "(rows recorded at CI smoke sizes)")
+    ap.add_argument("--mode", choices=["normalized", "absolute"],
+                    default="normalized")
+    ap.add_argument("--median-max", type=float, default=1.6)
+    ap.add_argument("--row-max", type=float, default=3.0)
+    ap.add_argument("--abs-floor-us", type=float, default=5000.0)
+    ap.add_argument("--report", default=None,
+                    help="also write the report to this path (CI artifact)")
+    args = ap.parse_args(argv)
+
+    baseline_path = args.baseline or find_baseline(args.root, smoke=args.smoke)
+    ok, lines = compare(
+        load_rows(args.current), load_rows(baseline_path),
+        mode=args.mode, median_max=args.median_max, row_max=args.row_max,
+        abs_floor_us=args.abs_floor_us)
+    report = "\n".join([f"baseline: {baseline_path}", *lines])
+    print(report)
+    if args.report:
+        Path(args.report).write_text(report + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,11 @@ first-class slot:
     FALKON solve per lambda (shared centers, preconditioner and K_nM
     streaming; the lambda grid rides the fused-fit cache).
   * **Serving** — ``KrrServer`` micro-batches prediction traffic over a
-    fitted estimator or model.
+    fitted estimator or model; ``AsyncKrrServer`` (+ ``ServeConfig``) adds
+    the fault-tolerant continuous-batching loop: bounded queue with
+    backpressure, per-request deadlines, wave-level failure isolation, and
+    SLO-triggered degradation to a fallback model (DESIGN.md §9,
+    docs/serving.md).
 
     from repro.api import BlessSampler, FalkonRegressor, FitConfig
 
@@ -35,6 +39,7 @@ leak through this namespace).
 from ..core.gram import Kernel, make_kernel
 from ..core.leverage import CenterSet
 from ..families import KernelFamily, kernel_family_names, register_kernel_family
+from ..serving.async_krr import AsyncKrrServer, ServeConfig
 from ..serving.krr import KrrServer
 from .estimators import ExactKrr, FalkonRegressor, FitConfig, NystromRegressor
 from .samplers import (
@@ -64,5 +69,5 @@ __all__ = [
     "Kernel", "make_kernel", "KernelFamily", "register_kernel_family",
     "kernel_family_names",
     # shared data type + serving
-    "CenterSet", "KrrServer",
+    "CenterSet", "KrrServer", "AsyncKrrServer", "ServeConfig",
 ]

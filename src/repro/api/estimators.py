@@ -46,14 +46,19 @@ class FitConfig:
         well below a BLESS sampler's own lam — Sec. 4).
       iters: CG iteration count (FALKON only; the direct solvers ignore it).
       backend: kernel-operator backend spec — instance, registry name
-        ("jnp" | "pallas" | "sharded"), or None for the platform heuristic.
+        ("jnp" | "pallas" | "sharded" | "guarded"), or None for the
+        platform heuristic.
       seed: PRNG seed for the sampler when ``fit`` is not given a key.
+      check_finite: arm the §9 finite-output fence on FALKON fits (the
+        direct solvers are always fenced); costs one host sync per fit, so
+        it is off by default on this hot path.
     """
 
     lam: float = 1e-3
     iters: int = 20
     backend: BackendLike = None
     seed: int = 0
+    check_finite: bool = False
 
 
 def _as_kernel(kernel: Kernel | str, sigma: float) -> Kernel:
@@ -141,7 +146,8 @@ class FalkonRegressor(_KrrEstimator):
             self._fit_shape_ = x.shape
         self.model_ = falkon_fit(self.kernel, x, y, self.centers_, cfg.lam,
                                  a_diag=self.a_diag_, iters=cfg.iters,
-                                 backend=cfg.backend, callback=callback)
+                                 backend=cfg.backend, callback=callback,
+                                 check_finite=cfg.check_finite)
         return self
 
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import warnings
 from typing import Callable, ClassVar
 
 import jax
@@ -43,6 +44,7 @@ from ..kernels.falkon_matvec import ops as falkon_ops
 from ..kernels.gram import ops as gram_ops
 from ..kernels.quadform import ops as quadform_ops
 from ..kernels.rls_score import ops as rls_ops
+from . import health
 from .gram import (Kernel, blocked_cross, get_family, kernel_family_names,
                    register_backend)
 from .leverage import _chol_with_jitter
@@ -463,6 +465,94 @@ class ShardedBackend(Backend):
 
 
 # ---------------------------------------------------------------------------
+# Guarded fallback backend (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardedBackend(Backend):
+    """Primary backend with automatic per-dispatch fallback to a reference.
+
+    Wraps a ``primary`` (default: the fused Pallas kernels) and a
+    numerically equivalent ``fallback`` (default: the jnp streamer). Every
+    seam method tries the primary; a raised dispatch/compile failure is
+    recorded in the health event log (``kind="backend_fallback"``), warned
+    once per process per method, and the call is re-served by the fallback
+    — one bad kernel dispatch degrades that call's *speed*, never the
+    process. Registered as ``"guarded"`` so ``REPRO_BACKEND=guarded`` (or
+    ``backend="guarded"``) hardens any entry point without code changes.
+
+    Not jit-safe: the try/except needs the host, so fits through it take
+    the host-driven CG path (the fallback leg would anyway — mixing traced
+    primary dispatch with host recovery inside one jit cannot work).
+    """
+
+    name: ClassVar[str] = "guarded"
+    jit_safe: ClassVar[bool] = False
+    primary: Backend = dataclasses.field(default_factory=lambda: PallasBackend())
+    fallback: Backend = dataclasses.field(default_factory=lambda: JnpBackend())
+
+    def _guard(self, method: str, *args):
+        try:
+            return getattr(self.primary, method)(*args)
+        except Exception as e:  # noqa: BLE001 — any dispatch failure falls back
+            health.record_event("backend_fallback", method=method,
+                                primary=self.primary.name,
+                                fallback=self.fallback.name, error=repr(e))
+            warnings.warn(
+                f"{self.primary.name}.{method} dispatch failed ({e!r}); "
+                f"falling back to {self.fallback.name}", RuntimeWarning,
+                stacklevel=3)
+            return getattr(self.fallback, method)(*args)
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) via the primary, re-served by the fallback on failure."""
+        return self._guard("gram_block", kernel, x, z)
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        """Eq. 3 quadratic form with per-dispatch fallback."""
+        return self._guard("masked_quadform", kernel, x_cand, z, mask, reg)
+
+    def rls_scores(self, kernel: Kernel, x_cand: Array, z: Array,
+                   z_mask: Array, reg: Array, lamn: Array) -> Array:
+        """Eq. 3 scores with per-dispatch fallback."""
+        return self._guard("rls_scores", kernel, x_cand, z, z_mask, reg, lamn)
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+        """CG quadratic op; both construction and every call are guarded."""
+        try:
+            op = self.primary.knm_quadratic(kernel, x, z)
+        except Exception as e:  # noqa: BLE001
+            health.record_event("backend_fallback", method="knm_quadratic",
+                                primary=self.primary.name,
+                                fallback=self.fallback.name, error=repr(e))
+            return self.fallback.knm_quadratic(kernel, x, z)
+        fb: list[KnmQuadraticOp | None] = [None]
+
+        def guarded_op(v: Array) -> Array:
+            try:
+                return op(v)
+            except Exception as e:  # noqa: BLE001
+                health.record_event("backend_fallback", method="knm_quadratic",
+                                    primary=self.primary.name,
+                                    fallback=self.fallback.name, error=repr(e))
+                if fb[0] is None:
+                    fb[0] = self.fallback.knm_quadratic(kernel, x, z)
+                return fb[0](v)
+
+        return guarded_op
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y with per-dispatch fallback."""
+        return self._guard("knm_t", kernel, x, z, y)
+
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        """K(X, Z) v (the serving contraction) with per-dispatch fallback."""
+        return self._guard("knm_matvec", kernel, x, z, v)
+
+
+# ---------------------------------------------------------------------------
 # Selection
 # ---------------------------------------------------------------------------
 
@@ -502,8 +592,10 @@ def default_backend(n: int | None = None) -> Backend:
 
 _ENV_BACKENDS: dict[str, Callable[[], Backend]] = {
     "jnp": JnpBackend, "pallas": PallasBackend, "sharded": ShardedBackend,
+    "guarded": GuardedBackend,
 }
 
 register_backend("jnp", JnpBackend)
 register_backend("pallas", PallasBackend)
 register_backend("sharded", ShardedBackend)
+register_backend("guarded", GuardedBackend)

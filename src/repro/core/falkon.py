@@ -56,8 +56,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..testing import faults
+from . import health
 from .gram import BackendLike, Kernel, resolve_backend
-from .leverage import CenterSet, _chol_with_jitter
+from .leverage import CenterSet  # noqa: F401 — re-exported for callers
 
 Array = jax.Array
 
@@ -184,7 +186,8 @@ _CG_FREEZE_REL = 1e-14
 
 
 def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
-       callback: Callable[[int, Array], None] | None = None) -> Array:
+       callback: Callable[[int, Array], None] | None = None,
+       trajectory: bool = False) -> Array | tuple[Array, Array]:
     """CG on SPD ``matvec``; fixed iteration count (paper uses t ~ log n).
 
     ``b`` may be a single right-hand side (q,) or an (q, k) panel — the
@@ -193,6 +196,14 @@ def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
     flops), while the scalar recurrences (alpha, mu) run per column from
     axis-0 reductions. Columns are individually frozen once converged (see
     ``_CG_FREEZE_REL``); for (q,) inputs the recurrence is exactly plain CG.
+
+    With ``trajectory=True`` returns ``(beta, residuals)`` where
+    ``residuals`` is the (iters+1,) — or (iters+1, k) — squared residual
+    norm history (row 0 = initial): the raw material for the §9 health
+    diagnostics (``health.SolveDiagnostics``). The history is a small
+    carried array updated in place; its cost is invisible next to the
+    K_nM-streaming matvec. (Frozen columns stop updating r, so their
+    recorded residual simply plateaus — the recorded value stays exact.)
 
     With ``callback`` the loop runs on host (per-iteration metrics for the
     Fig. 4/5 analogues); otherwise it is a single jitted lax.fori_loop.
@@ -214,10 +225,24 @@ def cg(matvec: Callable[[Array], Array], b: Array, iters: int,
 
     state = (jnp.zeros_like(b), b, b, rs0)
     if callback is not None:
+        resid = [rs0]
         for i in range(iters):
             state = step(state)
+            resid.append(state[3])
             callback(i, state[0])
+        if trajectory:
+            return state[0], jnp.stack(resid)
         return state[0]
+    if trajectory:
+        traj0 = jnp.zeros((iters + 1,) + rs0.shape, rs0.dtype).at[0].set(rs0)
+
+        def tstep(i, st):
+            inner, traj = st
+            inner = step(inner)
+            return inner, traj.at[i + 1].set(inner[3])
+
+        (beta, *_), traj = jax.lax.fori_loop(0, iters, tstep, (state, traj0))
+        return beta, traj
     return jax.lax.fori_loop(0, iters, lambda _, s: step(s), state)[0]
 
 
@@ -286,12 +311,13 @@ def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
          donate_argnames=("yp",))
 def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
                         a_diag: Array, lam: Array, n: Array, *, iters: int,
-                        backend, block: int) -> Array:
+                        backend, block: int) -> tuple[Array, Array]:
     """Preconditioner + multi-RHS CG + alpha recovery as one compiled program.
 
     ``yp`` is the bucket-padded target: (n_pad,) for single-output, or an
     (n_pad, kb) panel for multi-RHS; alpha comes back with matching shape
-    and the caller slices the real columns out.
+    and the caller slices the real columns out. Also returns the CG
+    residual trajectory for the §9 health diagnostics.
     """
     global _FUSED_FIT_TRACES
     _FUSED_FIT_TRACES += 1
@@ -305,8 +331,8 @@ def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
         w = quad(u) + lam * n * (kmm @ u)
         return prec.apply_t(w)
 
-    beta = cg(matvec, prec.apply_t(kty), iters)
-    return prec.apply(beta)
+    beta, resid = cg(matvec, prec.apply_t(kty), iters, trajectory=True)
+    return prec.apply(beta), resid
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +349,10 @@ class FalkonModel:
     #: serving-time contraction backend; set by falkon_fit to the fit-time
     #: choice, overridable per predict call. None -> platform heuristic.
     backend: BackendLike = None
+    #: §9 solver health report (CG residual trajectory with lazy
+    #: converged/stalled/diverged classification); None for models built
+    #: by the direct solvers or hand-assembled.
+    diagnostics: "health.SolveDiagnostics | None" = None
 
     def predict(self, x: Array, *, backend: BackendLike = None) -> Array:
         """K(x, centers) alpha through the kernel-operator seam.
@@ -332,10 +362,23 @@ class FalkonModel:
         never materialized, each streamed Gram block is evaluated once and
         contracted against every alpha column, so extra outputs cost GEMM
         flops only.
+
+        This is the serving dispatch boundary, so it hosts the chaos
+        harness's dispatch-level injection points (inert one-dict-check
+        when nothing is armed; see repro/testing/faults.py). It carries no
+        finite fence of its own — the serving engines fence per wave where
+        the result is materialized anyway, and raw callers opt in via
+        ``health.check_finite``.
         """
         spec = backend if backend is not None else self.backend
         be = resolve_backend(spec, n=x.shape[0])
-        return be.knm_matvec(self.kernel, x, self.centers, self.alpha)
+        if faults.active():
+            faults.sleep_if(rows=x.shape[0], centers=self.centers.shape[0])
+            faults.raise_if()
+        out = be.knm_matvec(self.kernel, x, self.centers, self.alpha)
+        if faults.active():
+            out = faults.corrupt("gram.nan_tile", out)
+        return out
 
 
 def falkon_fit(
@@ -350,6 +393,7 @@ def falkon_fit(
     backend: BackendLike = None,
     callback: Callable[[int, FalkonModel], None] | None = None,
     fused: bool | None = None,
+    check_finite: bool = False,
 ) -> FalkonModel:
     """Fit FALKON (uniform A=I) or FALKON-BLESS (A from Alg. 1/2).
 
@@ -368,6 +412,14 @@ def falkon_fit(
     shared across columns, so extra outputs cost only the extra GEMM flops.
     On the fused path k is padded up to a power-of-two column bucket
     (``_k_bucket``) so every RHS count in a bucket shares one executable.
+
+    Every fit records its CG residual trajectory as
+    ``model.diagnostics`` (``health.SolveDiagnostics`` — lazy, no device
+    sync until a property is read). ``check_finite=True`` arms the §9
+    output fence: raise ``health.NonFiniteError`` instead of returning a
+    NaN alpha. It defaults off because the check is one blocking device
+    round-trip per fit — real cost in the hot sweep paths (fig3 warm-start
+    refits, KFoldSweep grids) that dispatch many fits back to back.
     """
     n = x.shape[0]
     m = centers.shape[0]
@@ -396,12 +448,17 @@ def falkon_fit(
             yp = jnp.pad(y, ((0, pad),) if single else ((0, pad), (0, col_pad)))
         else:
             yp = y + jnp.zeros((), y.dtype)
-        alpha = _fused_falkon_solve(
+        alpha, resid = _fused_falkon_solve(
             kernel, jnp.pad(x, ((0, pad), (0, 0))), yp, centers, a_diag,
             jnp.asarray(lam, jnp.float32), jnp.asarray(n, jnp.int32),
             iters=iters, backend=backend, block=block)
         alpha = alpha if single else alpha[:, : y.shape[1]]
-        return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=backend)
+        resid = resid if single else resid[:, : y.shape[1]]
+        if check_finite:
+            health.check_finite(alpha, "falkon_fit alpha (fused)")
+        return FalkonModel(centers=centers, alpha=alpha, kernel=kernel,
+                           backend=backend,
+                           diagnostics=health.SolveDiagnostics(resid))
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
     kmm = backend.gram_block(kernel, centers, centers)
     quad, kty = backend.knm_operators(kernel, x, centers, y)
@@ -417,9 +474,13 @@ def falkon_fit(
         def cb(i, beta):  # noqa: E731 — host-side metric hook
             callback(i, FalkonModel(centers=centers, alpha=prec.apply(beta),
                                     kernel=kernel, backend=backend))
-    beta = cg(matvec, b, iters, callback=cb)
-    return FalkonModel(centers=centers, alpha=prec.apply(beta), kernel=kernel,
-                       backend=backend)
+    beta, resid = cg(matvec, b, iters, callback=cb, trajectory=True)
+    alpha = prec.apply(beta)
+    if check_finite:
+        health.check_finite(alpha, "falkon_fit alpha")
+    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel,
+                       backend=backend,
+                       diagnostics=health.SolveDiagnostics(resid))
 
 
 def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: float,

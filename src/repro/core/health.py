@@ -1,0 +1,234 @@
+"""Numerical health fences for the solver stack (DESIGN.md §9).
+
+Three failure domains get a fence here:
+
+  * **Factorization** — ``chol_with_jitter_ladder`` replaces the old
+    one-shot jitter retry with an escalating ladder (jitter ``eps * 10^k``
+    for ``k = 0 .. JITTER_LEVELS-1``, eps trace-scaled) and *reports the
+    level used*, so callers can log how sick their K_MM was.
+    ``safe_cholesky`` is the host-level wrapper with the fence armed: it
+    either returns a finite factor or raises ``FactorizationError`` —
+    never a silent NaN.
+  * **Iteration** — ``SolveDiagnostics`` classifies a CG residual
+    trajectory (converged / stalled / diverged) lazily on host access;
+    ``repro.core.falkon`` records the trajectory on every fit and surfaces
+    it as ``FalkonModel.diagnostics``.
+  * **Outputs** — ``check_finite`` is the boundary fence: one blocking
+    ``isfinite`` reduce, raising ``NonFiniteError`` instead of letting a
+    NaN propagate into downstream consumers (serving waves, benchmarks).
+
+Fence placement policy (the why lives in DESIGN.md §9): fences sit at
+*boundaries that already materialize their result* (serving wave scatter,
+the direct oracle solvers) so the happy path pays no extra device syncs;
+the hot fused-fit sweep path keeps its fence opt-in
+(``falkon_fit(check_finite=True)`` / ``FitConfig(check_finite=True)``).
+
+Recoveries that should be visible in aggregate (jitter escalations,
+backend fallbacks, wave failures) are appended to a bounded in-process
+event log — ``record_event`` / ``events`` / ``clear_events`` — so tests
+and operators can ask "how often are we limping?" without scraping logs.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class HealthError(RuntimeError):
+    """Base class for solver/serving health-fence failures."""
+
+
+class FactorizationError(HealthError):
+    """A Cholesky factorization stayed NaN through the whole jitter ladder."""
+
+
+class NonFiniteError(HealthError):
+    """A finite-output fence caught NaN/Inf at a layer boundary."""
+
+
+# ---------------------------------------------------------------------------
+# Escalating-jitter Cholesky ladder
+# ---------------------------------------------------------------------------
+
+#: Ladder length: attempt k uses jitter eps0 * 10^k with eps0 = 1e-6 * the
+#: mean diagonal. k = JITTER_LEVELS-1 therefore adds ~10x the mean diagonal —
+#: a matrix that is still indefinite past that point is not meaningfully PSD
+#: and the fence should fire rather than keep inflating the regularizer.
+JITTER_LEVELS = 8
+
+
+def chol_with_jitter_ladder(a: Array) -> tuple[Array, Array]:
+    """Cholesky with escalating trace-scaled jitter; returns (chol, level).
+
+    Attempt ``k`` factors ``a + eps0 * 10^k * I`` (``eps0 = 1e-6 * mean
+    diag``); the ladder stops at the first finite factor. ``level`` is the
+    int32 number of the successful attempt (0 = base jitter sufficed). If
+    every level fails the factor is returned as-is (NaN) with
+    ``level == JITTER_LEVELS - 1`` — jit-safe code cannot raise, so the
+    host-level fences (``safe_cholesky``, ``check_finite``) own the raise.
+
+    jit-safe: the escalation is a ``lax.while_loop``, so the common path
+    pays exactly one factorization and the retries are only *computed* when
+    the previous level produced NaN.
+    """
+    eps0 = jnp.maximum(1e-6 * jnp.mean(jnp.diagonal(a)), 1e-30)
+    eye = jnp.eye(a.shape[0], dtype=a.dtype)
+
+    def attempt(k: Array) -> Array:
+        jitter = eps0 * jnp.power(10.0, k.astype(a.dtype))
+        return jnp.linalg.cholesky(a + jitter * eye)
+
+    def cond(state):
+        k, chol = state
+        return jnp.logical_and(jnp.any(jnp.isnan(chol)), k < JITTER_LEVELS - 1)
+
+    def body(state):
+        k, _ = state
+        return k + 1, attempt(k + 1)
+
+    k0 = jnp.asarray(0, jnp.int32)
+    level, chol = jax.lax.while_loop(cond, body, (k0, attempt(k0)))
+    return chol, level
+
+
+def safe_cholesky(a: Array, *, what: str = "matrix") -> tuple[Array, int]:
+    """Host-level ladder with the fence armed: finite factor or raise.
+
+    Returns ``(chol, level)`` with ``level`` a Python int (the jitter level
+    used, 0 = base). Raises ``FactorizationError`` if the factor is still
+    NaN after the whole ladder — this function never returns NaN silently.
+    Escalations (level > 0) are appended to the health event log. Not
+    jit-safe (it blocks on the NaN flag); traced code uses
+    ``chol_with_jitter_ladder`` and fences at the boundary instead.
+    """
+    chol, level = chol_with_jitter_ladder(a)
+    lvl = int(level)
+    if not bool(jnp.all(jnp.isfinite(chol))):
+        record_event("factorization_failure", what=what, level=lvl)
+        raise FactorizationError(
+            f"Cholesky of {what} ({a.shape[0]}x{a.shape[1]}) stayed non-finite "
+            f"after {JITTER_LEVELS} escalating jitter levels (up to ~10x the "
+            "mean diagonal); the matrix is not numerically PSD")
+    if lvl > 0:
+        record_event("jitter_escalation", what=what, level=lvl)
+    return chol, lvl
+
+
+# ---------------------------------------------------------------------------
+# Finite-output fence
+# ---------------------------------------------------------------------------
+
+
+def check_finite(x: Array, what: str = "array") -> Array:
+    """Boundary fence: return ``x`` unchanged or raise ``NonFiniteError``.
+
+    One blocking ``isfinite`` reduce — callers place it where the result is
+    about to be materialized anyway (serving wave scatter, oracle solvers)
+    or behind an opt-in flag on hot paths (see module docstring).
+    """
+    if not bool(jnp.all(jnp.isfinite(x))):
+        bad = int(jnp.sum(~jnp.isfinite(x)))
+        record_event("non_finite", what=what, bad=bad)
+        raise NonFiniteError(
+            f"{what} contains {bad} non-finite value(s) "
+            f"(shape {tuple(x.shape)}); refusing to propagate")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# CG residual-trajectory diagnostics
+# ---------------------------------------------------------------------------
+
+#: A residual that ever exceeds this factor over its initial value means the
+#: "SPD" operator/preconditioner pair is broken — CG on a true SPD system is
+#: monotone in the energy norm and near-monotone in the residual.
+DIVERGENCE_FACTOR = 1e2
+#: Converged: squared residual reduced below this fraction of initial
+#: (sqrt ~ 1e-4 relative residual — solid for fp32 downstream use).
+CONVERGED_REL = 1e-8
+#: Stalled: the second half of the run improved the squared residual by
+#: less than this factor while still far from converged.
+STALL_IMPROVEMENT = 0.5
+
+
+class SolveDiagnostics(NamedTuple):
+    """Residual-trajectory health report for one CG solve.
+
+    ``residuals`` holds the squared preconditioned-residual norms, shape
+    (iters+1,) for a single RHS or (iters+1, k) for a multi-RHS panel
+    (row 0 is the initial residual). All classification properties fetch
+    lazily on first access — building the diagnostics at fit time costs no
+    device sync.
+    """
+
+    residuals: Array
+
+    def _np(self) -> np.ndarray:
+        r = np.asarray(self.residuals, dtype=np.float64)
+        return r[:, None] if r.ndim == 1 else r
+
+    @property
+    def reduction(self) -> np.ndarray:
+        """Per-column final/initial squared-residual ratio, shape (k,)."""
+        r = self._np()
+        return r[-1] / np.maximum(r[0], 1e-300)
+
+    @property
+    def converged(self) -> bool:
+        """Every column reduced its squared residual below CONVERGED_REL."""
+        return bool(np.all(self.reduction < CONVERGED_REL))
+
+    @property
+    def diverged(self) -> bool:
+        """Some column's residual blew past DIVERGENCE_FACTOR x initial."""
+        r = self._np()
+        return bool(np.any(np.max(r, axis=0) > DIVERGENCE_FACTOR * np.maximum(r[0], 1e-300)))
+
+    @property
+    def stalled(self) -> bool:
+        """Some column made < STALL_IMPROVEMENT progress over the second
+        half of the run while still unconverged (and did not diverge)."""
+        if self.diverged:
+            return False
+        r = self._np()
+        mid = r[r.shape[0] // 2]
+        tail = r[-1] / np.maximum(mid, 1e-300)
+        unconverged = self.reduction >= CONVERGED_REL
+        return bool(np.any(unconverged & (tail > STALL_IMPROVEMENT)))
+
+    def summary(self) -> str:
+        """One-line human-readable verdict (forces the residual fetch)."""
+        state = ("diverged" if self.diverged else
+                 "converged" if self.converged else
+                 "stalled" if self.stalled else "progressing")
+        worst = float(np.max(self.reduction))
+        return (f"cg {state}: {self.residuals.shape[0] - 1} iters, "
+                f"worst residual reduction {worst:.3e}")
+
+
+# ---------------------------------------------------------------------------
+# Health event log
+# ---------------------------------------------------------------------------
+
+_EVENTS: collections.deque = collections.deque(maxlen=512)
+
+
+def record_event(kind: str, **info: Any) -> None:
+    """Append a recovery/failure event to the bounded in-process log."""
+    _EVENTS.append({"kind": kind, **info})
+
+
+def events(kind: str | None = None) -> list[dict]:
+    """Snapshot of recorded events, optionally filtered by ``kind``."""
+    return [e for e in _EVENTS if kind is None or e["kind"] == kind]
+
+
+def clear_events() -> None:
+    """Drop all recorded events (tests isolate themselves with this)."""
+    _EVENTS.clear()

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from .gram import BackendLike, Kernel, resolve_backend
+from .health import chol_with_jitter_ladder
 
 _SCORE_FLOOR = 1e-12  # keep sampling probabilities strictly positive
 
@@ -183,23 +184,18 @@ def uniform_center_set(idx: jax.Array, n: int, mbuf: int) -> CenterSet:
 
 
 def _chol_with_jitter(a: jax.Array) -> jax.Array:
-    """Cholesky with a trace-scaled jitter retry for fp32 robustness.
+    """Cholesky with escalating trace-scaled jitter for fp32 robustness.
 
-    The retry lives under ``lax.cond`` so the second factorization is only
-    *computed* when the first produced NaNs — the common path pays one
-    Cholesky, not two. (Safe here: the blocked scorers map over rows with
-    ``lax.map``/scan, not vmap, so the cond never degrades to a select.)
+    Now the §9 health ladder (``core/health.py``): jitter ``eps * 10^k``
+    escalated under a ``lax.while_loop``, so the common path pays one
+    Cholesky and retries are only *computed* on NaN. (Safe here: the
+    blocked scorers map over rows with ``lax.map``/scan, not vmap.)
+    Callers that want the jitter level reported (or the NaN-exhaustion
+    fence armed) use ``health.chol_with_jitter_ladder`` /
+    ``health.safe_cholesky`` directly.
     """
-    eps = 1e-6 * jnp.mean(jnp.diagonal(a))
-    eye = jnp.eye(a.shape[0], dtype=a.dtype)
-    chol = jnp.linalg.cholesky(a + eps * eye)
-    bad = jnp.any(jnp.isnan(chol))
-    return jax.lax.cond(
-        bad,
-        lambda _: jnp.linalg.cholesky(a + (1e3 * eps) * eye),
-        lambda _: chol,
-        None,
-    )
+    chol, _ = chol_with_jitter_ladder(a)
+    return chol
 
 
 def _psd_solve(a: jax.Array, b: jax.Array) -> jax.Array:

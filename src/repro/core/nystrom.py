@@ -14,9 +14,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..testing import faults
+from . import health
 from .falkon import FalkonModel
 from .gram import BackendLike, Kernel, resolve_backend
-from .leverage import _chol_with_jitter, _psd_solve
 
 Array = jax.Array
 
@@ -24,24 +25,41 @@ Array = jax.Array
 def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float,
                 *, backend: BackendLike = None) -> FalkonModel:
     """Def. 4 direct solve; ``y`` may be (n,) or (n, k) (multi-output shares
-    the factorization — only the K_nM^T y right-hand sides differ)."""
+    the factorization — only the K_nM^T y right-hand sides differ).
+
+    This path runs eagerly and materializes its result, so the §9 health
+    fences are always armed here: the escalating-jitter Cholesky ladder
+    either factors H or raises ``health.FactorizationError``, and the
+    returned alpha passes a finite-output fence — never a silent NaN. It
+    also hosts the chaos harness's ``kmm.indefinite`` injection point.
+    """
     n = x.shape[0]
     be = resolve_backend(backend, n=n)
     knm = be.gram_block(kernel, x, centers)
     kmm = be.gram_block(kernel, centers, centers)
+    if faults.active():
+        kmm = faults.corrupt("kmm.indefinite", kmm)
     h = knm.T @ knm + lam * n * kmm
     # knm is already materialized: K_nM^T y is one matmul on it, exact for
     # (n,) and (n, k) alike — no second pass over the kernel evaluations.
-    alpha = _psd_solve(h, knm.T @ y)
+    chol, _ = health.safe_cholesky(h, what="Nystrom-KRR H = KnM^T KnM + lam n K_MM")
+    alpha = jax.scipy.linalg.cho_solve((chol, True), knm.T @ y)
+    health.check_finite(alpha, "nystrom_krr alpha")
     return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=be)
 
 
 def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float,
               *, backend: BackendLike = None) -> FalkonModel:
-    """Eq. 12 exact solve; multi-output ``y`` (n, k) rides the same Cholesky."""
+    """Eq. 12 exact solve; multi-output ``y`` (n, k) rides the same Cholesky.
+
+    Fenced like ``nystrom_krr``: the jitter ladder factors K + lam n I or
+    raises, and the coefficients pass a finite-output fence.
+    """
     n = x.shape[0]
     be = resolve_backend(backend, n=n)
     k = be.gram_block(kernel, x, x)
-    chol = _chol_with_jitter(k + lam * n * jnp.eye(n, dtype=k.dtype))
+    chol, _ = health.safe_cholesky(k + lam * n * jnp.eye(n, dtype=k.dtype),
+                                   what="exact-KRR K + lam n I")
     c = jax.scipy.linalg.cho_solve((chol, True), y)
+    health.check_finite(c, "exact_krr alpha")
     return FalkonModel(centers=x, alpha=c, kernel=kernel, backend=be)

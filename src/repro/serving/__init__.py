@@ -1,4 +1,7 @@
+from .async_krr import (AsyncKrrServer, QueueFull, RequestStatus, ServeConfig)
 from .engine import ServeEngine, prefill, sample_greedy
 from .krr import KrrServer, pow2_bucket
 
-__all__ = ["ServeEngine", "prefill", "sample_greedy", "KrrServer", "pow2_bucket"]
+__all__ = ["ServeEngine", "prefill", "sample_greedy", "KrrServer",
+           "pow2_bucket", "AsyncKrrServer", "ServeConfig", "RequestStatus",
+           "QueueFull"]

@@ -1,0 +1,400 @@
+"""Fault-tolerant async continuous-batching KRR serving (DESIGN.md §9).
+
+``KrrServer`` (serving/krr.py) packs requests into padded pow2 waves but is
+synchronous and fragile: ``flush`` blocks until everything is served, a
+single bad wave poisons every co-packed request, and there is no notion of
+queue pressure or deadlines. ``AsyncKrrServer`` keeps the wave packing and
+bucket-bounded jit cache and wraps them in a serving loop with explicit
+failure domains:
+
+  * **Bounded queue + backpressure.** ``submit`` rejects (``QueueFull``) or
+    sheds the oldest queued request (policy ``overflow="shed_oldest"``)
+    once ``max_queue_rows`` is exceeded — overload degrades tail latency,
+    never memory.
+  * **Per-request deadlines.** A request whose deadline passes while still
+    queued is EXPIRED at pack time instead of wasting a dispatch slot.
+  * **Slot recycling.** Up to ``max_inflight`` waves are in flight at once
+    (JAX async dispatch): ``step()`` first fills free slots from the queue,
+    then completes the oldest wave — the device pipeline stays busy while
+    the host packs, exactly the ServeEngine fixed-slot discipline applied
+    to wave-granular work.
+  * **Wave-level failure isolation.** A wave that fails (dispatch error or
+    non-finite outputs caught by the §9 fence) is retried split in half,
+    recursively; a singleton that still fails marks only *that* request
+    FAILED. One poisoned request costs log2(wave) extra dispatches, not the
+    wave.
+  * **Graceful degradation.** When the rolling p99 wave latency breaches
+    ``slo``, the server switches to ``fallback_model`` (e.g. a coarser
+    center set) until p99 recovers below ``recover_factor * slo``
+    (hysteresis, so it doesn't flap).
+
+Deterministic tests drive this with ``repro.testing.faults`` (injected NaN
+tiles / latency) and ``VirtualClock`` via the ``clock=`` hook.
+
+    server = AsyncKrrServer(model, config=ServeConfig(slo=0.05))
+    rid = server.submit(x_req, deadline=clock() + 0.2)
+    server.run_until_idle()
+    server.result(rid)        # Array | None; server.status(rid) says why
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import health
+from ..core.falkon import FalkonModel
+from ..core.gram import BackendLike
+from .krr import pow2_bucket
+
+Array = jax.Array
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the queue is full and ``overflow="reject"``."""
+
+
+class RequestStatus(enum.Enum):
+    """Lifecycle of a request inside ``AsyncKrrServer``."""
+
+    QUEUED = "queued"
+    IN_FLIGHT = "in_flight"
+    DONE = "done"
+    FAILED = "failed"
+    EXPIRED = "expired"
+    SHED = "shed"
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued prediction request and its serving metadata."""
+
+    rid: int
+    x: Array
+    submitted: float
+    deadline: Optional[float] = None
+    status: RequestStatus = RequestStatus.QUEUED
+    result: Optional[Array] = None
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-loop policy knobs for ``AsyncKrrServer``.
+
+    Attributes:
+      max_wave: row budget per fused dispatch (requests never split).
+      min_bucket: smallest pow2 padding bucket (bounds the jit cache).
+      max_queue_rows: queued-row bound; None = unbounded (no backpressure).
+      overflow: what ``submit`` does at the bound — ``"reject"`` raises
+        ``QueueFull``; ``"shed_oldest"`` drops the oldest queued request
+        (marked SHED) to admit the new one.
+      deadline: default per-request deadline in seconds after submit
+        (None = no deadline); ``submit(deadline=...)`` overrides with an
+        absolute clock time.
+      slo: target p99 wave latency in seconds; breaching it switches to the
+        fallback model when one is configured (None disables).
+      slo_window: rolling window of wave latencies for the p99 estimate.
+      recover_factor: leave degraded mode when p99 < recover_factor * slo.
+      check_finite: fence every completed wave's outputs; non-finite rows
+        trigger the split-retry isolation path instead of reaching clients.
+      max_inflight: wave slots kept in flight before completion is forced.
+    """
+
+    max_wave: int = 4096
+    min_bucket: int = 64
+    max_queue_rows: Optional[int] = None
+    overflow: str = "reject"
+    deadline: Optional[float] = None
+    slo: Optional[float] = None
+    slo_window: int = 64
+    recover_factor: float = 0.5
+    check_finite: bool = True
+    max_inflight: int = 2
+
+    def __post_init__(self):
+        if self.max_wave < 1 or self.min_bucket < 1 or self.max_inflight < 1:
+            raise ValueError("max_wave, min_bucket, max_inflight must be positive")
+        if self.overflow not in ("reject", "shed_oldest"):
+            raise ValueError(f"overflow must be 'reject' or 'shed_oldest', "
+                             f"got {self.overflow!r}")
+        if not 0.0 < self.recover_factor <= 1.0:
+            raise ValueError("recover_factor must be in (0, 1]")
+
+
+@dataclasses.dataclass
+class _Wave:
+    """One in-flight dispatch: its requests and the (padded) prediction."""
+
+    requests: List[Request]
+    rows: int
+    pred: Optional[Array]
+    started: float
+    degraded: bool
+
+
+def _unwrap(model) -> FalkonModel:
+    """Accept a FalkonModel or a fitted repro.api estimator."""
+    if hasattr(model, "centers"):
+        return model
+    inner = getattr(model, "model_", None)
+    if inner is None:
+        raise ValueError(f"{type(model).__name__} has no fitted model; "
+                         "call .fit before serving it")
+    return inner
+
+
+class AsyncKrrServer:
+    """Fault-tolerant continuous-batching server over one (or two) models.
+
+    Args:
+      model: primary ``FalkonModel`` or fitted ``repro.api`` estimator.
+      fallback_model: cheaper model served while degraded (optional).
+      config: the ``ServeConfig`` policy bundle.
+      backend: per-server override of the model's fit-time backend.
+      clock: monotonic-seconds callable; inject ``VirtualClock`` in tests.
+    """
+
+    def __init__(self, model, *, fallback_model=None,
+                 config: ServeConfig = ServeConfig(),
+                 backend: BackendLike = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.model = _unwrap(model)
+        self.fallback_model = (None if fallback_model is None
+                               else _unwrap(fallback_model))
+        d = self.model.centers.shape[1]
+        if self.fallback_model is not None and \
+                self.fallback_model.centers.shape[1] != d:
+            raise ValueError("fallback model feature dim "
+                             f"{self.fallback_model.centers.shape[1]} != {d}")
+        self.config = config
+        self.backend = backend
+        self.clock = clock
+        self.degraded = False
+        self._queue: Deque[Request] = collections.deque()
+        self._queued_rows = 0
+        self._inflight: Deque[_Wave] = collections.deque()
+        self._requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._latencies: Deque[float] = collections.deque(maxlen=config.slo_window)
+        self.stats = {"requests": 0, "rows": 0, "dispatches": 0,
+                      "padded_rows": 0, "buckets": set(), "wave_failures": 0,
+                      "splits": 0, "shed": 0, "expired": 0, "failed": 0,
+                      "degraded_waves": 0}
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, x: Array, *, deadline: Optional[float] = None) -> int:
+        """Queue a (r, d) request; returns its id.
+
+        Raises ``ValueError`` on malformed or non-finite input (a NaN row
+        must not reach a shared wave) and ``QueueFull`` under backpressure
+        with the ``"reject"`` policy. ``deadline`` is an absolute clock
+        time; defaults to ``config.deadline`` seconds from now.
+        """
+        x = jnp.asarray(x)
+        d = self.model.centers.shape[1]
+        if x.ndim != 2 or x.shape[0] == 0 or x.shape[1] != d:
+            raise ValueError(f"request must be a non-empty (r, {d}) array, "
+                             f"got {x.shape}")
+        if x.shape[0] > self.config.max_wave:
+            raise ValueError(f"request rows {x.shape[0]} exceed max_wave "
+                             f"{self.config.max_wave}")
+        if not bool(jnp.all(jnp.isfinite(x))):
+            raise ValueError("request contains non-finite values; refusing "
+                             "to pack it into a shared wave")
+        cap = self.config.max_queue_rows
+        if cap is not None:
+            while self._queued_rows + x.shape[0] > cap:
+                if self.config.overflow == "reject" or not self._queue:
+                    raise QueueFull(
+                        f"queue at {self._queued_rows} rows (cap {cap})")
+                victim = self._queue.popleft()
+                self._queued_rows -= victim.x.shape[0]
+                victim.status = RequestStatus.SHED
+                victim.error = "shed under queue pressure"
+                self.stats["shed"] += 1
+        now = self.clock()
+        if deadline is None and self.config.deadline is not None:
+            deadline = now + self.config.deadline
+        req = Request(rid=self._next_rid, x=x, submitted=now, deadline=deadline)
+        self._next_rid += 1
+        self._queue.append(req)
+        self._queued_rows += x.shape[0]
+        self._requests[req.rid] = req
+        self.stats["requests"] += 1
+        self.stats["rows"] += x.shape[0]
+        return req.rid
+
+    # -- serving loop --------------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduler tick: fill free wave slots, then complete the
+        oldest in-flight wave. Returns True if any work remains."""
+        while self._queue and len(self._inflight) < self.config.max_inflight:
+            if not self._dispatch_next():
+                break
+        if self._inflight:
+            self._complete_oldest()
+        return bool(self._queue or self._inflight)
+
+    def run_until_idle(self) -> None:
+        """Drive ``step`` until the queue and all wave slots are empty."""
+        while self.step():
+            pass
+
+    def result(self, rid: int) -> Optional[Array]:
+        """The (r,) / (r, k) prediction for ``rid``, or None if not DONE."""
+        return self._requests[rid].result
+
+    def status(self, rid: int) -> RequestStatus:
+        """Lifecycle state of ``rid`` (why ``result`` may be None)."""
+        return self._requests[rid].status
+
+    def p99_latency(self) -> Optional[float]:
+        """Rolling p99 of wave latencies (None until a wave completed)."""
+        if not self._latencies:
+            return None
+        return float(np.percentile(np.asarray(self._latencies), 99))
+
+    # -- internals -----------------------------------------------------------
+
+    def _pack(self) -> List[Request]:
+        """Pop a wave's worth of live requests (expiring stale ones)."""
+        now = self.clock()
+        wave: List[Request] = []
+        rows = 0
+        while self._queue:
+            nxt = self._queue[0]
+            if nxt.deadline is not None and now > nxt.deadline:
+                self._queue.popleft()
+                self._queued_rows -= nxt.x.shape[0]
+                nxt.status = RequestStatus.EXPIRED
+                nxt.error = "deadline passed while queued"
+                self.stats["expired"] += 1
+                continue
+            if wave and rows + nxt.x.shape[0] > self.config.max_wave:
+                break
+            self._queue.popleft()
+            self._queued_rows -= nxt.x.shape[0]
+            wave.append(nxt)
+            rows += nxt.x.shape[0]
+        return wave
+
+    def _serving_model(self) -> FalkonModel:
+        if self.degraded and self.fallback_model is not None:
+            return self.fallback_model
+        return self.model
+
+    def _dispatch_next(self) -> bool:
+        """Pack and dispatch one wave; False if the queue yielded nothing."""
+        wave = self._pack()
+        if not wave:
+            return False
+        self._dispatch(wave)
+        return True
+
+    def _dispatch(self, wave: List[Request]) -> bool:
+        """Dispatch one wave. True if it went in flight; False if dispatch
+        itself raised (the failure was already isolated via _wave_failed)."""
+        rows = sum(r.x.shape[0] for r in wave)
+        xw = wave[0].x if len(wave) == 1 else jnp.concatenate(
+            [r.x for r in wave], axis=0)
+        bucket = pow2_bucket(rows, self.config.min_bucket)
+        xp = jnp.pad(xw, ((0, bucket - rows), (0, 0)))
+        model = self._serving_model()
+        degraded = model is not self.model
+        started = self.clock()
+        self.stats["dispatches"] += 1
+        self.stats["padded_rows"] += bucket - rows
+        self.stats["buckets"].add(bucket)
+        if degraded:
+            self.stats["degraded_waves"] += 1
+        for r in wave:
+            r.status = RequestStatus.IN_FLIGHT
+        # predict is async-dispatched: the host returns with a future-backed
+        # Array and keeps packing while the device (or injected fault) runs.
+        # An *eager* dispatch failure (e.g. a kernel raising at launch) is a
+        # wave failure like any other and goes through the same isolation.
+        try:
+            pred = model.predict(xp, backend=self.backend)
+        except Exception as e:  # noqa: BLE001 — isolated, never propagated
+            self._wave_failed(_Wave(requests=wave, rows=rows, pred=None,
+                                    started=started, degraded=degraded), e)
+            return False
+        self._inflight.append(_Wave(requests=wave, rows=rows, pred=pred,
+                                    started=started, degraded=degraded))
+        return True
+
+    def _complete_oldest(self) -> None:
+        """Block on the oldest in-flight wave (FIFO completion)."""
+        self._complete(self._inflight.popleft())
+
+    def _complete(self, wave: _Wave) -> None:
+        """Block on a wave; scatter results or isolate the failure."""
+        try:
+            pred = jax.block_until_ready(wave.pred)
+            if self.config.check_finite:
+                live = pred[:wave.rows]
+                if not bool(jnp.all(jnp.isfinite(live))):
+                    raise health.NonFiniteError(
+                        f"wave of {len(wave.requests)} requests produced "
+                        f"{int(jnp.sum(~jnp.isfinite(live)))} non-finite "
+                        "outputs")
+        except Exception as e:  # noqa: BLE001 — any wave failure is isolated
+            self._wave_failed(wave, e)
+            return
+        latency = self.clock() - wave.started
+        off = 0
+        for r in wave.requests:
+            r.result = pred[off:off + r.x.shape[0]]
+            off += r.x.shape[0]
+            r.status = RequestStatus.DONE
+        self._latencies.append(latency)
+        self._update_slo()
+
+    def _wave_failed(self, wave: _Wave, err: Exception) -> None:
+        """Isolate a failed wave: retry split in half, recursively; a
+        singleton that still fails takes down only its own request."""
+        self.stats["wave_failures"] += 1
+        health.record_event("wave_failure", requests=len(wave.requests),
+                            rows=wave.rows, error=repr(err))
+        if len(wave.requests) == 1:
+            req = wave.requests[0]
+            req.status = RequestStatus.FAILED
+            req.error = repr(err)
+            self.stats["failed"] += 1
+            return
+        mid = len(wave.requests) // 2
+        self.stats["splits"] += 1
+        for half in (wave.requests[:mid], wave.requests[mid:]):
+            # complete the retry immediately (pop() = the wave _dispatch just
+            # appended, NOT the FIFO head — older unrelated waves stay put):
+            # retries are synchronous so a persistent fault bottoms out to
+            # singletons before new traffic packs in.
+            if self._dispatch(half):
+                self._complete(self._inflight.pop())
+
+    def _update_slo(self) -> None:
+        cfg = self.config
+        if cfg.slo is None or self.fallback_model is None:
+            return
+        p99 = self.p99_latency()
+        if p99 is None:
+            return
+        if not self.degraded and p99 > cfg.slo:
+            self.degraded = True
+            health.record_event("slo_degrade", p99=p99, slo=cfg.slo)
+        elif self.degraded and p99 < cfg.recover_factor * cfg.slo:
+            self.degraded = False
+            health.record_event("slo_recover", p99=p99, slo=cfg.slo)
+
+
+__all__ = ["AsyncKrrServer", "ServeConfig", "Request", "RequestStatus",
+           "QueueFull"]

@@ -68,7 +68,16 @@ class ServeEngine:
             lambda p, c, t, pos, ln: decode_step(p, self.cfg, c, t, pos, length=ln))
 
     def add_request(self, slot: int, prompt: list[int]) -> None:
-        """Feed a prompt through the decode path into this slot's cache."""
+        """Feed a prompt through the decode path into this slot's cache.
+
+        The prompt must be non-empty: the first sampled token comes from the
+        last prompt position's logits, so an empty prompt has nothing to
+        condition on (and previously surfaced as an unbound-variable error).
+        """
+        if not prompt:
+            raise ValueError(
+                f"add_request(slot={slot}): prompt must contain at least one "
+                "token — an empty prompt has no logits to sample from")
         for tok in prompt:
             toks = self.tokens.at[slot].set(tok)
             logits, self.cache = self._step(self.params, self.cache, toks,

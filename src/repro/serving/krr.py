@@ -27,8 +27,9 @@ request through the same wave packing; since the multi-RHS panel contraction
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Tuple, Union
+from typing import Deque, Dict, List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +79,9 @@ class KrrServer:
 
     def reset(self) -> None:
         """Drop queued requests and zero the counters (e.g. after warmup)."""
-        self._queue: List[Tuple[int, Array]] = []
+        # deque: flush drains from the left, so popleft must be O(1) —
+        # a list.pop(0) here made a full flush quadratic in queue length.
+        self._queue: Deque[Tuple[int, Array]] = collections.deque()
         self._next_rid = 0
         self._pending_rows = 0
         # serving counters: dispatches vs requests is the batching win;
@@ -92,6 +95,14 @@ class KrrServer:
         d = self.model.centers.shape[1]
         if x.ndim != 2 or x.shape[0] == 0 or x.shape[1] != d:
             raise ValueError(f"request must be a non-empty (r, {d}) array, got {x.shape}")
+        # Finite-input fence (DESIGN.md §9): requests are concatenated into
+        # shared waves, so one NaN row would contaminate every co-packed
+        # request's Gram tile. Reject it at the door instead.
+        if not bool(jnp.all(jnp.isfinite(x))):
+            raise ValueError(
+                f"request contains non-finite values "
+                f"({int(jnp.sum(~jnp.isfinite(x)))} of {x.size}); refusing to "
+                "pack it into a shared wave")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, x))
@@ -108,11 +119,11 @@ class KrrServer:
         """Serve every queued request; returns {request id: (r,) predictions}."""
         out: Dict[int, Array] = {}
         while self._queue:
-            wave: List[Tuple[int, Array]] = [self._queue.pop(0)]
+            wave: List[Tuple[int, Array]] = [self._queue.popleft()]
             rows = wave[0][1].shape[0]
             # pack until the row budget: a request never splits across waves
             while self._queue and rows + self._queue[0][1].shape[0] <= self.max_wave:
-                rid, x = self._queue.pop(0)
+                rid, x = self._queue.popleft()
                 wave.append((rid, x))
                 rows += x.shape[0]
             self._pending_rows -= rows

@@ -1,0 +1,4 @@
+"""Test/chaos harnesses that ship with the package (see ``faults``)."""
+from . import faults
+
+__all__ = ["faults"]

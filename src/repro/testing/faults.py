@@ -1,0 +1,256 @@
+"""Named fault-injection points for the chaos suite (DESIGN.md §9).
+
+Production modules host tiny hooks at their dispatch boundaries::
+
+    if faults.active():                      # one dict emptiness check
+        faults.raise_if("backend.error")
+        out = faults.corrupt("gram.nan_tile", out)
+
+With no fault armed, ``active()`` is a single module-level dict check —
+the happy path pays nanoseconds per *host-level dispatch* (never per
+element), which is what lets the hooks live in real code rather than a
+test-only fork. This module deliberately imports nothing from ``repro``
+so any layer can host a hook without an import cycle.
+
+Injection points (the registry rejects unknown names):
+
+  ``gram.nan_tile``     NaN written into a just-computed Gram/predict tile
+                        (params: ``rows`` — how many leading rows to
+                        poison, default 1).
+  ``backend.error``     raise ``FaultInjected`` at kernel dispatch.
+  ``dispatch.latency``  artificial per-dispatch latency (params:
+                        ``seconds`` — float, or a callable
+                        ``(rows, centers) -> float``; ``advance`` — a
+                        virtual-clock hook called instead of sleeping).
+  ``kmm.indefinite``    shift a K_MM-like matrix indefinite before its
+                        factorization (params: ``shift`` — multiples of
+                        the mean diagonal subtracted, default 2.0).
+
+Arming is scoped by the ``fault`` context manager; ``times=N`` makes a
+fault fire on the first N hook hits then go inert (transient faults:
+"the first wave fails, the retry succeeds"). Hooks fire at *host dispatch
+time*: jitted programs compiled before arming are cached and will not see
+a fault baked in — the production hook sites are all eager for exactly
+this reason, and chaos tests that touch traced paths clear jit caches.
+
+``FaultyBackend`` wraps any kernel-operator backend with every hook, for
+driving faults through code that takes a backend instance (e.g. proving
+``GuardedBackend`` falls back). ``VirtualClock`` is a deterministic clock
+for serving simulations (Poisson overload traces in virtual time).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax.numpy as jnp
+
+#: The known injection points; ``fault()`` rejects anything else so a typo
+#: cannot silently arm nothing.
+POINTS = frozenset({
+    "gram.nan_tile",
+    "backend.error",
+    "dispatch.latency",
+    "kmm.indefinite",
+})
+
+
+class FaultInjected(RuntimeError):
+    """The error raised by an armed ``backend.error`` injection point."""
+
+
+@dataclasses.dataclass
+class Fault:
+    """One armed fault: its point, remaining budget, and parameters."""
+
+    point: str
+    times: int | None = None  # fire at most N times; None = every hit
+    params: dict = dataclasses.field(default_factory=dict)
+    fired: int = 0
+
+    @property
+    def exhausted(self) -> bool:
+        return self.times is not None and self.fired >= self.times
+
+
+_ACTIVE: dict[str, Fault] = {}
+
+
+def active() -> bool:
+    """True iff any fault is armed — the happy-path fast check."""
+    return bool(_ACTIVE)
+
+
+@contextlib.contextmanager
+def fault(point: str, *, times: int | None = None, **params: Any) -> Iterator[Fault]:
+    """Arm ``point`` for the duration of the context; yields the Fault.
+
+    ``times`` bounds how many hook hits fire (None = every hit); extra
+    keyword arguments parameterize the point (see module docstring).
+    """
+    if point not in POINTS:
+        raise ValueError(f"unknown fault point {point!r}; known: {sorted(POINTS)}")
+    if point in _ACTIVE:
+        raise RuntimeError(f"fault point {point!r} is already armed")
+    f = Fault(point=point, times=times, params=params)
+    _ACTIVE[point] = f
+    try:
+        yield f
+    finally:
+        _ACTIVE.pop(point, None)
+
+
+def _take(point: str) -> Fault | None:
+    """Consume one firing of ``point`` if armed and not exhausted."""
+    if not _ACTIVE:
+        return None
+    f = _ACTIVE.get(point)
+    if f is None or f.exhausted:
+        return None
+    f.fired += 1
+    return f
+
+
+# -- hook functions (called from production dispatch sites) -----------------
+
+
+def raise_if(point: str = "backend.error") -> None:
+    """Raise ``FaultInjected`` if ``point`` is armed (dispatch-failure hook)."""
+    f = _take(point)
+    if f is not None:
+        raise FaultInjected(f"injected fault at {point!r} (firing {f.fired})")
+
+
+def sleep_if(point: str = "dispatch.latency", *, rows: int = 0, centers: int = 0) -> None:
+    """Apply armed per-dispatch latency: real ``time.sleep`` or, when the
+    fault carries an ``advance`` hook, a virtual-clock advance (keeps
+    overload simulations deterministic and fast)."""
+    f = _take(point)
+    if f is None:
+        return
+    seconds = f.params.get("seconds", 0.0)
+    if callable(seconds):
+        seconds = seconds(rows, centers)
+    advance = f.params.get("advance")
+    if advance is not None:
+        advance(seconds)
+    elif seconds > 0:
+        time.sleep(seconds)
+
+
+def corrupt(point: str, x):
+    """Return ``x`` corrupted per the armed fault at ``point`` (or as-is).
+
+    ``gram.nan_tile`` poisons the first ``rows`` rows (default 1) of the
+    tile with NaN; ``kmm.indefinite`` subtracts ``shift`` x the mean
+    diagonal from the diagonal, pushing the matrix indefinite.
+    """
+    f = _take(point)
+    if f is None:
+        return x
+    if point == "gram.nan_tile":
+        rows = int(f.params.get("rows", 1))
+        return x.at[:rows].set(jnp.nan)
+    if point == "kmm.indefinite":
+        shift = float(f.params.get("shift", 2.0))
+        scale = shift * jnp.mean(jnp.diagonal(x))
+        return x - scale * jnp.eye(x.shape[0], dtype=x.dtype)
+    raise ValueError(f"{point!r} is not a corruption point")
+
+
+# ---------------------------------------------------------------------------
+# Backend wrapper + virtual clock
+# ---------------------------------------------------------------------------
+
+
+class FaultyBackend:
+    """A kernel-operator backend wrapper with every injection point armed.
+
+    Duck-typed against the ``Backend`` seam (``jit_safe=False`` keeps all
+    calls on the eager host path, where hooks fire reliably); unknown
+    attributes delegate to the wrapped backend. Wrap a real backend and
+    arm faults to drive failures through any code that accepts a backend
+    instance — e.g. proving ``GuardedBackend(primary=FaultyBackend(...))``
+    falls back per dispatch.
+    """
+
+    jit_safe = False
+    name = "faulty"
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def _pre(self, rows: int = 0, centers: int = 0) -> None:
+        if active():
+            sleep_if(rows=rows, centers=centers)
+            raise_if()
+
+    def gram_block(self, kernel, x, z):
+        """K(X, Z) through the hooks."""
+        self._pre(x.shape[0], z.shape[0])
+        out = self.inner.gram_block(kernel, x, z)
+        return corrupt("gram.nan_tile", out) if active() else out
+
+    def masked_quadform(self, kernel, x_cand, z, mask, reg):
+        """Eq. 3 quadratic form through the hooks."""
+        self._pre(x_cand.shape[0], z.shape[0])
+        return self.inner.masked_quadform(kernel, x_cand, z, mask, reg)
+
+    def rls_scores(self, kernel, x_cand, z, z_mask, reg, lamn):
+        """Eq. 3 scores through the hooks."""
+        self._pre(x_cand.shape[0], z.shape[0])
+        return self.inner.rls_scores(kernel, x_cand, z, z_mask, reg, lamn)
+
+    def knm_quadratic(self, kernel, x, z):
+        """CG quadratic op whose every call passes through the hooks."""
+        inner_op = self.inner.knm_quadratic(kernel, x, z)
+
+        def op(v):
+            self._pre(x.shape[0], z.shape[0])
+            return inner_op(v)
+
+        return op
+
+    def knm_t(self, kernel, x, z, y):
+        """K_nM^T y through the hooks."""
+        self._pre(x.shape[0], z.shape[0])
+        return self.inner.knm_t(kernel, x, z, y)
+
+    def knm_operators(self, kernel, x, z, y):
+        """(quadratic op, K_nM^T y) with both legs hooked."""
+        return self.knm_quadratic(kernel, x, z), self.knm_t(kernel, x, z, y)
+
+    def knm_matvec(self, kernel, x, z, v):
+        """K(X, Z) v through the hooks (the serving dispatch)."""
+        self._pre(x.shape[0], z.shape[0])
+        out = self.inner.knm_matvec(kernel, x, z, v)
+        return corrupt("gram.nan_tile", out) if active() else out
+
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+
+@dataclasses.dataclass
+class VirtualClock:
+    """A deterministic manual clock: call it for "now", ``advance`` to move.
+
+    Drop-in for ``AsyncKrrServer``'s ``clock=`` so overload traces run in
+    virtual time — pair ``advance`` with the ``dispatch.latency`` fault's
+    ``advance=`` hook and simulated dispatches cost simulated seconds.
+    """
+
+    t: float = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        """Move the clock forward by ``dt`` seconds (must be >= 0)."""
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock backwards ({dt})")
+        self.t += dt
+
+
+Hook = Callable[..., None]

@@ -1,0 +1,219 @@
+"""AsyncKrrServer (serving/async_krr.py): happy-path parity with direct
+predict, bounded-queue backpressure policies, deadlines, slot recycling,
+and SLO-triggered degradation with hysteresis (virtual clock, no faults —
+the fault-driven paths live in test_chaos.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AsyncKrrServer, FalkonRegressor, FitConfig,
+                       ServeConfig)
+from repro.core import falkon_fit, make_kernel
+from repro.serving.async_krr import QueueFull, RequestStatus
+from repro.testing import faults
+from repro.testing.faults import VirtualClock
+
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+@pytest.fixture(scope="module")
+def model():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1] ** 2
+    return falkon_fit(KERN, x, y, x[:48], 1e-3, iters=15, backend="jnp")
+
+
+def _reqs(seeds_and_sizes):
+    return [jax.random.normal(jax.random.PRNGKey(s), (r, 6))
+            for s, r in seeds_and_sizes]
+
+
+def test_results_match_direct_predict(model):
+    srv = AsyncKrrServer(model, config=ServeConfig(max_wave=512, min_bucket=64))
+    reqs = _reqs([(1, 3), (2, 17), (3, 64), (4, 100), (5, 1)])
+    rids = [srv.submit(q) for q in reqs]
+    srv.run_until_idle()
+    for rid, q in zip(rids, reqs):
+        assert srv.status(rid) == RequestStatus.DONE
+        np.testing.assert_allclose(srv.result(rid), model.predict(q),
+                                   rtol=1e-6, atol=1e-6)
+    assert srv.stats["dispatches"] == 1  # 185 rows pack into one wave
+    assert srv.stats["buckets"] == {256}
+
+
+def test_multi_output_waves():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.sin(2 * x[:, 0])
+    Y = jnp.stack([y, -y, jnp.cos(x[:, 2])], axis=1)
+    m = falkon_fit(KERN, x, Y, x[:48], 1e-3, iters=12, backend="jnp")
+    srv = AsyncKrrServer(m, config=ServeConfig(min_bucket=32))
+    reqs = _reqs([(1, 5), (2, 40)])
+    rids = [srv.submit(q) for q in reqs]
+    srv.run_until_idle()
+    for rid, q in zip(rids, reqs):
+        assert srv.result(rid).shape == (q.shape[0], 3)
+        np.testing.assert_allclose(srv.result(rid), m.predict(q),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_estimator_unwrap_and_unfitted():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (200, 4))
+    est = FalkonRegressor(config=FitConfig(lam=1e-4, iters=10, backend="jnp"))
+    with pytest.raises(ValueError, match="call .fit"):
+        AsyncKrrServer(est)
+    est.fit(x, jnp.sin(x[:, 0]))
+    srv = AsyncKrrServer(est, config=ServeConfig(min_bucket=16))
+    rid = srv.submit(x[:9])
+    srv.run_until_idle()
+    np.testing.assert_allclose(srv.result(rid), est.predict(x[:9]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_submit_validation(model):
+    srv = AsyncKrrServer(model, config=ServeConfig(max_wave=64))
+    with pytest.raises(ValueError, match=r"\(r, 6\)"):
+        srv.submit(jnp.zeros((5,)))
+    with pytest.raises(ValueError, match=r"\(r, 6\)"):
+        srv.submit(jnp.zeros((0, 6)))
+    with pytest.raises(ValueError, match="non-finite"):
+        srv.submit(jnp.full((4, 6), jnp.nan))
+    with pytest.raises(ValueError, match="exceed max_wave"):
+        srv.submit(jnp.zeros((65, 6)))
+
+
+def test_backpressure_reject(model):
+    srv = AsyncKrrServer(model, config=ServeConfig(max_queue_rows=20,
+                                                   min_bucket=16))
+    srv.submit(_reqs([(1, 12)])[0])
+    with pytest.raises(QueueFull, match="cap 20"):
+        srv.submit(_reqs([(2, 12)])[0])
+    srv.run_until_idle()  # draining frees the queue again
+    srv.submit(_reqs([(2, 12)])[0])
+    srv.run_until_idle()
+
+
+def test_backpressure_shed_oldest(model):
+    srv = AsyncKrrServer(model, config=ServeConfig(
+        max_queue_rows=20, overflow="shed_oldest", min_bucket=16))
+    r1 = srv.submit(_reqs([(1, 12)])[0])
+    r2 = srv.submit(_reqs([(2, 12)])[0])  # sheds r1 to admit r2
+    assert srv.status(r1) == RequestStatus.SHED
+    assert srv.result(r1) is None
+    assert srv.stats["shed"] == 1
+    srv.run_until_idle()
+    assert srv.status(r2) == RequestStatus.DONE
+
+
+def test_deadline_expiry_virtual_clock(model):
+    clk = VirtualClock()
+    srv = AsyncKrrServer(model, config=ServeConfig(deadline=1.0, min_bucket=16),
+                         clock=clk)
+    stale = srv.submit(_reqs([(1, 8)])[0])
+    clk.advance(5.0)  # its deadline passes while queued
+    fresh = srv.submit(_reqs([(2, 8)])[0])
+    srv.run_until_idle()
+    assert srv.status(stale) == RequestStatus.EXPIRED
+    assert srv.status(fresh) == RequestStatus.DONE
+    assert srv.stats["expired"] == 1
+    # an explicit absolute deadline overrides the config default
+    far = srv.submit(_reqs([(3, 8)])[0], deadline=clk() + 100.0)
+    clk.advance(50.0)
+    srv.run_until_idle()
+    assert srv.status(far) == RequestStatus.DONE
+
+
+def test_slot_recycling_under_load(model):
+    """Many small requests against 2 in-flight slots: everything completes,
+    waves respect max_wave, and the bucket set stays jit-cache bounded."""
+    srv = AsyncKrrServer(model, config=ServeConfig(max_wave=64, min_bucket=16,
+                                                   max_inflight=2))
+    rids = [srv.submit(_reqs([(s, 1 + (s * 37) % 30)])[0]) for s in range(30)]
+    srv.run_until_idle()
+    assert all(srv.status(r) == RequestStatus.DONE for r in rids)
+    assert srv.stats["dispatches"] >= 8  # 30 requests cannot fit one wave
+    buckets = srv.stats["buckets"]
+    assert all(b >= 16 and (b & (b - 1)) == 0 for b in buckets)
+    assert len(buckets) <= 3  # 16..64: log2(max_wave/min_bucket)+1
+
+
+def test_degradation_hysteresis_virtual_clock(model):
+    """SLO breach flips to the fallback model; recovery waits for p99 to
+    drop below recover_factor * slo (no flapping at the threshold)."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (100, 6))
+    fallback = falkon_fit(KERN, x, jnp.sin(x[:, 0]), x[:16], 1e-2, iters=5,
+                          backend="jnp")
+    clk = VirtualClock()
+    cfg = ServeConfig(min_bucket=16, slo=0.1, slo_window=4, recover_factor=0.5)
+    srv = AsyncKrrServer(model, fallback_model=fallback, config=cfg, clock=clk)
+
+    def serve_one(cost):
+        rid = srv.submit(_reqs([(int(clk() * 100) % 97, 8)])[0])
+        # the dispatch.latency hook advances the virtual clock *during* the
+        # predict dispatch, so the wave's measured latency is `cost`
+        with faults.fault("dispatch.latency", seconds=cost,
+                          advance=clk.advance):
+            srv.run_until_idle()
+        return rid
+
+    for _ in range(4):
+        serve_one(0.5)  # p99 = 0.5 > slo
+    assert srv.degraded
+    serve_one(0.06)  # served by the fallback model while degraded
+    assert srv.stats["degraded_waves"] >= 1
+    # 0.06 < slo but NOT < 0.5 * slo: still degraded (hysteresis band)
+    for _ in range(4):
+        serve_one(0.06)
+    assert srv.degraded
+    for _ in range(4):
+        serve_one(0.01)  # p99 sinks below 0.05 -> recover
+    assert not srv.degraded
+    done = serve_one(0.01)
+    np.testing.assert_allclose(srv.result(done),
+                               model.predict(srv._requests[done].x),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_degraded_results_come_from_fallback(model):
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (100, 6))
+    fallback = falkon_fit(KERN, x, jnp.sin(x[:, 0]), x[:16], 1e-2, iters=5,
+                          backend="jnp")
+    clk = VirtualClock()
+    srv = AsyncKrrServer(model, fallback_model=fallback,
+                         config=ServeConfig(min_bucket=16, slo=0.1,
+                                            slo_window=4), clock=clk)
+    q = _reqs([(3, 8)])[0]
+    rid = srv.submit(q)
+    with faults.fault("dispatch.latency", seconds=1.0, advance=clk.advance):
+        srv.run_until_idle()  # breaches SLO -> degraded for the NEXT wave
+    assert srv.degraded
+    rid2 = srv.submit(q)
+    srv.run_until_idle()
+    np.testing.assert_allclose(srv.result(rid2), fallback.predict(q),
+                               rtol=1e-6, atol=1e-6)
+    # primary-and-fallback differ, so this really was the fallback
+    assert not np.allclose(np.asarray(srv.result(rid2)),
+                           np.asarray(srv.result(rid)))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="overflow"):
+        ServeConfig(overflow="drop_newest")
+    with pytest.raises(ValueError, match="positive"):
+        ServeConfig(max_wave=0)
+    with pytest.raises(ValueError, match="recover_factor"):
+        ServeConfig(recover_factor=0.0)
+
+
+def test_fallback_dim_mismatch(model):
+    key = jax.random.PRNGKey(1)
+    x3 = jax.random.normal(key, (50, 3))
+    bad = falkon_fit(make_kernel("gaussian", sigma=1.0), x3, x3[:, 0],
+                     x3[:10], 1e-2, iters=3, backend="jnp")
+    with pytest.raises(ValueError, match="feature dim"):
+        AsyncKrrServer(model, fallback_model=bad)

@@ -27,10 +27,12 @@ def _problem(n=400, m=64, d=6, seed=0):
 
 
 def test_registry_names_and_resolution():
-    assert backend_names() == ["jnp", "pallas", "sharded"]
+    assert backend_names() == ["guarded", "jnp", "pallas", "sharded"]
     assert isinstance(resolve_backend("jnp"), JnpBackend)
     assert isinstance(resolve_backend("pallas"), PallasBackend)
     assert isinstance(resolve_backend("sharded"), ShardedBackend)
+    from repro.core.backend import GuardedBackend
+    assert isinstance(resolve_backend("guarded"), GuardedBackend)
     inst = PallasBackend(interpret=True)
     assert resolve_backend(inst) is inst
     with pytest.raises(ValueError, match="unknown backend"):

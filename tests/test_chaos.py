@@ -1,0 +1,290 @@
+"""Chaos suite (marker: chaos): drives the repro.testing.faults injection
+points end-to-end through the production hook sites and asserts the §9
+fences *recover or isolate* — a NaN Gram tile fails only its own wave (and
+only its own request after bisection), a Poisson overload sheds/degrades
+while keeping served p99 inside the SLO, an indefinite K_MM either rides
+the jitter ladder or raises, and a dying primary backend falls back to the
+jnp streamer with correct results. Runs in its own CI job (-m chaos)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AsyncKrrServer, FalkonRegressor, FitConfig,
+                       NystromRegressor, ServeConfig)
+from repro.core import falkon_fit, make_kernel
+from repro.core import health
+from repro.core.backend import GuardedBackend, JnpBackend
+from repro.core.nystrom import nystrom_krr
+from repro.serving.async_krr import RequestStatus
+from repro.testing import faults
+
+pytestmark = pytest.mark.chaos
+
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    health.clear_events()
+    assert not faults.active()  # no fault leaks between tests
+    yield
+    assert not faults.active()
+    health.clear_events()
+
+
+@pytest.fixture(scope="module")
+def model():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (300, 5))
+    y = jnp.sin(2 * x[:, 0]) + 0.3 * x[:, 1]
+    return falkon_fit(KERN, x, y, x[:40], 1e-3, iters=12, backend="jnp")
+
+
+def _reqs(seeds_and_sizes, d=5):
+    return [jax.random.normal(jax.random.PRNGKey(s), (r, d))
+            for s, r in seeds_and_sizes]
+
+
+# -- fault registry hygiene --------------------------------------------------
+
+
+def test_registry_rejects_unknown_points():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        with faults.fault("gram.nan_tlie"):  # typo must not arm nothing
+            pass
+    with faults.fault("backend.error", times=1):
+        with pytest.raises(RuntimeError, match="already armed"):
+            with faults.fault("backend.error"):
+                pass
+
+
+def test_times_budget_exhausts():
+    with faults.fault("backend.error", times=2) as f:
+        for _ in range(2):
+            with pytest.raises(faults.FaultInjected):
+                faults.raise_if()
+        faults.raise_if()  # third hit: exhausted, no raise
+        assert f.fired == 2 and f.exhausted
+    faults.raise_if()  # disarmed after the context
+
+
+# -- NaN Gram tile through serving -------------------------------------------
+
+
+def test_transient_nan_wave_retried_and_recovers(model):
+    """A NaN tile poisons one wave (times=1): the finite fence catches it,
+    the wave is bisected, the retries run clean, every request is DONE."""
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    reqs = _reqs([(1, 8), (2, 8), (3, 8), (4, 8)])
+    rids = [srv.submit(q) for q in reqs]
+    with faults.fault("gram.nan_tile", times=1):
+        srv.run_until_idle()
+    for rid, q in zip(rids, reqs):
+        assert srv.status(rid) == RequestStatus.DONE
+        np.testing.assert_allclose(srv.result(rid), model.predict(q),
+                                   rtol=1e-6, atol=1e-6)
+        assert bool(jnp.all(jnp.isfinite(srv.result(rid))))
+    assert srv.stats["wave_failures"] == 1
+    assert srv.stats["splits"] >= 1
+    assert health.events("wave_failure")
+
+
+def test_persistent_nan_fails_only_its_wave(model):
+    """A fault outlasting the bisection (times=3 covers wave + both
+    singleton retries of a 2-request wave) fails exactly those requests;
+    traffic after the fault clears is served normally."""
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    r1, r2 = (srv.submit(q) for q in _reqs([(1, 8), (2, 8)]))
+    with faults.fault("gram.nan_tile", times=3):
+        srv.run_until_idle()
+    assert srv.status(r1) == RequestStatus.FAILED
+    assert srv.status(r2) == RequestStatus.FAILED
+    assert srv.result(r1) is None and srv.result(r2) is None
+    assert "non-finite" in srv._requests[r1].error
+    r3 = srv.submit(_reqs([(3, 8)])[0])
+    srv.run_until_idle()
+    assert srv.status(r3) == RequestStatus.DONE  # blast radius: 2 requests
+
+
+def test_nan_isolated_to_one_request_in_big_wave(model):
+    """NaN rows land in the padded wave head every retry; bisection still
+    narrows the failure until clean sub-waves serve — DONE requests must
+    be finite and exact."""
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    reqs = _reqs([(s, 4) for s in range(8)])
+    rids = [srv.submit(q) for q in reqs]
+    with faults.fault("gram.nan_tile", times=4, rows=2):
+        srv.run_until_idle()
+    done = [r for r in rids if srv.status(r) == RequestStatus.DONE]
+    failed = [r for r in rids if srv.status(r) == RequestStatus.FAILED]
+    assert len(done) + len(failed) == 8 and done  # no request lost or hung
+    for rid, q in zip(rids, reqs):
+        if srv.status(rid) == RequestStatus.DONE:
+            np.testing.assert_allclose(srv.result(rid), model.predict(q),
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_dispatch_error_wave_isolated(model):
+    """An exception raised *at dispatch* (not at completion) goes through
+    the same bisection isolation — it must never escape step()."""
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    rids = [srv.submit(q) for q in _reqs([(1, 8), (2, 8)])]
+    with faults.fault("backend.error", times=1):
+        srv.run_until_idle()
+    assert all(srv.status(r) == RequestStatus.DONE for r in rids)
+    assert srv.stats["wave_failures"] == 1
+
+
+# -- overload ----------------------------------------------------------------
+
+
+def test_poisson_overload_sheds_and_keeps_slo(model):
+    """Poisson arrivals far above capacity, in virtual time: the bounded
+    queue sheds/expires the excess, the SLO breach degrades to the cheap
+    fallback, and the p99 of *served* waves lands back inside the SLO."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (100, 5))
+    fallback = falkon_fit(KERN, x, jnp.sin(x[:, 0]), x[:8], 1e-2, iters=4,
+                          backend="jnp")
+    clk = faults.VirtualClock()
+    slo = 0.10
+    # recover_factor is set sticky-low: recovering mid-storm would re-admit
+    # the slow primary and flap (the hysteresis band itself is exercised in
+    # test_async_serving.py) — here we assert the degraded steady state.
+    srv = AsyncKrrServer(
+        model, fallback_model=fallback, clock=clk,
+        config=ServeConfig(min_bucket=16, max_wave=32, max_queue_rows=64,
+                           overflow="shed_oldest", deadline=2.0, slo=slo,
+                           slo_window=8, recover_factor=0.01))
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.005, size=120))  # ~200 req/s
+
+    # primary waves cost 0.2 virtual s (slo-breaching); fallback waves are
+    # 10x cheaper — centers 8 vs 40 keys the cost off the serving model
+    def cost(rows, centers):
+        return 0.2 if centers >= 40 else 0.02
+
+    with faults.fault("dispatch.latency", seconds=cost, advance=clk.advance):
+        i = 0
+        while i < len(arrivals) or srv._queue or srv._inflight:
+            while i < len(arrivals) and arrivals[i] <= clk():
+                try:
+                    srv.submit(_reqs([(i, 8)])[0])
+                except Exception:
+                    pass  # QueueFull under reject would be fine too
+                i += 1
+            if not srv.step() and i < len(arrivals):
+                # idle until the next arrival (dispatch latency may already
+                # have moved the clock past it — never step backwards)
+                clk.advance(max(0.0, arrivals[i] - clk()))
+    assert srv.stats["shed"] > 0 or srv.stats["expired"] > 0  # load was shed
+    assert srv.stats["degraded_waves"] > 0  # degradation engaged
+    assert health.events("slo_degrade")
+    assert srv.degraded  # storm still on: the server stays degraded
+    # in the degraded steady state the served (fallback) waves meet the SLO
+    assert srv.p99_latency() <= slo
+    served = [r for r in srv._requests.values()
+              if r.status == RequestStatus.DONE]
+    assert served  # the system kept serving under overload
+
+
+# -- indefinite K_MM ---------------------------------------------------------
+
+
+def test_indefinite_kmm_succeeds_or_raises_never_nan():
+    """Def. 4 solve with K_MM pushed indefinite at several severities: the
+    outcome is a finite model or FactorizationError — never NaN output."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (200, 4))
+    y = jnp.sin(x[:, 0])
+    for shift in (0.5, 2.0, 50.0):
+        health.clear_events()
+        try:
+            with faults.fault("kmm.indefinite", shift=shift):
+                m = nystrom_krr(KERN, x, y, x[:24], 1e-6, backend="jnp")
+        except health.HealthError:
+            continue  # raising is an accepted outcome; NaN is not
+        pred = m.predict(x[:16])
+        assert bool(jnp.all(jnp.isfinite(m.alpha)))
+        assert bool(jnp.all(jnp.isfinite(pred)))
+
+
+def test_indefinite_kmm_through_estimator():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (150, 3))
+    est = NystromRegressor(config=FitConfig(lam=1e-5, backend="jnp"))
+    try:
+        with faults.fault("kmm.indefinite", shift=3.0):
+            est.fit(x, jnp.cos(x[:, 0]))
+    except health.HealthError:
+        return
+    assert bool(jnp.all(jnp.isfinite(est.predict(x[:8]))))
+
+
+# -- backend fallback --------------------------------------------------------
+
+
+def test_guarded_backend_falls_back_per_dispatch():
+    """Every primary dispatch dies (FaultyBackend + backend.error): the
+    GuardedBackend serves each call from the jnp fallback, records the
+    fallbacks, and the results are exact."""
+    gb = GuardedBackend(primary=faults.FaultyBackend(JnpBackend()),
+                        fallback=JnpBackend())
+    ref = JnpBackend()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 3))
+    z = x[:16]
+    v = jnp.ones((16,))
+    with faults.fault("backend.error"):
+        with pytest.warns(RuntimeWarning, match="falling back to jnp"):
+            g = gb.gram_block(KERN, x, z)
+        mv = gb.knm_matvec(KERN, x, z, v)
+    np.testing.assert_allclose(g, ref.gram_block(KERN, x, z), rtol=1e-6)
+    np.testing.assert_allclose(mv, ref.knm_matvec(KERN, x, z, v), rtol=1e-6)
+    evts = health.events("backend_fallback")
+    assert len(evts) == 2 and {e["method"] for e in evts} == {
+        "gram_block", "knm_matvec"}
+
+
+def test_guarded_backend_fit_survives_dying_primary():
+    """A whole FALKON fit through a guarded, dying primary matches the
+    clean-backend fit (the guarded path is host-driven, so every dispatch
+    is individually recoverable)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (200, 4))
+    y = jnp.sin(2 * x[:, 0])
+    clean = falkon_fit(KERN, x, y, x[:24], 1e-3, iters=8, backend="jnp")
+    gb = GuardedBackend(primary=faults.FaultyBackend(JnpBackend()),
+                        fallback=JnpBackend())
+    import warnings as _w
+    with faults.fault("backend.error"), _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        m = falkon_fit(KERN, x, y, x[:24], 1e-3, iters=8, backend=gb)
+    # predict outside the fault scope: its own dispatch hook would fire too.
+    # Tolerance: the guarded fit takes the host CG path while the clean jnp
+    # fit is the fused jit solve — same math, different fp32 rounding.
+    pred = m.predict(x[:16], backend="jnp")
+    np.testing.assert_allclose(pred, clean.predict(x[:16]),
+                               rtol=5e-3, atol=5e-3)
+    assert health.events("backend_fallback")
+
+
+def test_guarded_backend_happy_path_uses_primary():
+    """With no fault armed the primary serves and no fallback is recorded
+    (the guard is pass-through, not a silent rewrite to jnp)."""
+    gb = GuardedBackend(primary=JnpBackend(), fallback=JnpBackend())
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 3))
+    out = gb.gram_block(KERN, x, x[:8])
+    assert out.shape == (32, 8)
+    assert health.events("backend_fallback") == []
+
+
+def test_faulty_backend_delegates_when_quiet(model):
+    """FaultyBackend with nothing armed is a transparent proxy — predict
+    through it matches the plain backend exactly."""
+    fb = faults.FaultyBackend(JnpBackend())
+    q = _reqs([(5, 8)])[0]
+    np.testing.assert_allclose(model.predict(q, backend=fb), model.predict(q),
+                               rtol=1e-7, atol=1e-7)

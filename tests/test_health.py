@@ -1,0 +1,222 @@
+"""Health fences (core/health.py): the escalating-jitter Cholesky ladder
+succeeds or raises — never a silent NaN — across indefinite, rank-deficient
+and fp32-borderline inputs; SolveDiagnostics classifies CG trajectories;
+falkon_fit surfaces diagnostics and the opt-in finite-output fence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import falkon_fit, make_kernel
+from repro.core import health
+from repro.core.nystrom import exact_krr, nystrom_krr
+
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+@pytest.fixture(autouse=True)
+def _clean_events():
+    health.clear_events()
+    yield
+    health.clear_events()
+
+
+def _spd(n, seed=0, dtype=jnp.float32):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (n, n), dtype=dtype)
+    return a @ a.T + n * jnp.eye(n, dtype=dtype)
+
+
+# -- the ladder itself -------------------------------------------------------
+
+
+def test_ladder_level0_on_well_conditioned():
+    chol, level = health.safe_cholesky(_spd(32), what="well-conditioned")
+    assert level == 0
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert health.events("jitter_escalation") == []  # no escalation recorded
+
+
+def test_ladder_recovers_rank_deficient():
+    """A rank-1 Gram matrix (plain Cholesky -> NaN rows) is rescued by the
+    ladder: finite factor, level reported, never silent NaN."""
+    v = jnp.linspace(1.0, 2.0, 24)
+    a = jnp.outer(v, v)  # rank 1, PSD, singular
+    assert bool(jnp.any(jnp.isnan(jnp.linalg.cholesky(a))))  # ladder needed
+    chol, level = health.safe_cholesky(a, what="rank-1")
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert 0 <= level < health.JITTER_LEVELS
+
+
+def test_ladder_escalates_on_slight_indefiniteness():
+    """Subtracting ~5e-4 x mean-diag pushes the matrix just indefinite: the
+    base 1e-6-scale jitter cannot fix it, a mid-ladder level can — the
+    reported level must be > 0 and the escalation recorded."""
+    v = jnp.linspace(1.0, 2.0, 24)
+    a = jnp.outer(v, v)
+    md = float(jnp.mean(jnp.diagonal(a)))
+    a = a - 5e-4 * md * jnp.eye(24)
+    chol, level = health.safe_cholesky(a, what="slightly-indefinite")
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert 0 < level < health.JITTER_LEVELS
+    evts = health.events("jitter_escalation")
+    assert len(evts) == 1 and evts[0]["level"] == level
+
+
+def test_ladder_recovers_fp32_borderline():
+    """Near-rank-deficient fp32 kernel matrix (huge bandwidth => all entries
+    ~1): the ladder must produce a finite factor, never NaN."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 3))
+    k = make_kernel("gaussian", sigma=100.0).gram(x)  # numerically ~ ones
+    chol, level = health.safe_cholesky(k, what="fp32-borderline")
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert level < health.JITTER_LEVELS
+
+
+def test_ladder_raises_on_hopeless_indefinite():
+    """A negative-definite matrix has a ~0-or-negative trace scale, so no
+    ladder level can fix it: the fence must raise, not return NaN."""
+    a = -jnp.eye(16)
+    with pytest.raises(health.FactorizationError, match="not numerically PSD"):
+        health.safe_cholesky(a, what="negative-definite")
+    assert health.events("factorization_failure")
+
+
+def test_ladder_is_jit_safe():
+    """chol_with_jitter_ladder must trace (it is what _chol_with_jitter and
+    the fused-fit preconditioner run under jit)."""
+    chol, level = jax.jit(health.chol_with_jitter_ladder)(_spd(16, seed=3))
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert int(level) == 0
+
+
+def test_psd_solve_still_exact_through_ladder():
+    """The leverage-score _psd_solve path (now routed through the ladder)
+    keeps its accuracy on healthy matrices — level 0 adds ~1e-6-scale
+    jitter only."""
+    from repro.core.leverage import _psd_solve
+    a = _spd(24, seed=5)
+    b = jax.random.normal(jax.random.PRNGKey(6), (24, 4))
+    np.testing.assert_allclose(np.asarray(a @ _psd_solve(a, b)), np.asarray(b),
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- finite-output fence -----------------------------------------------------
+
+
+def test_check_finite_passthrough_and_raise():
+    x = jnp.arange(6.0)
+    assert health.check_finite(x, "ok") is x
+    bad = x.at[2].set(jnp.nan).at[4].set(jnp.inf)
+    with pytest.raises(health.NonFiniteError, match="2 non-finite"):
+        health.check_finite(bad, "poisoned")
+    assert health.events("non_finite")[0]["bad"] == 2
+
+
+# -- CG trajectory diagnostics ----------------------------------------------
+
+
+def test_diagnostics_converged():
+    r = jnp.asarray([1.0, 1e-3, 1e-6, 1e-10])
+    d = health.SolveDiagnostics(r)
+    assert d.converged and not d.diverged and not d.stalled
+    assert "converged" in d.summary()
+
+
+def test_diagnostics_diverged():
+    r = jnp.asarray([1.0, 10.0, 1e4])
+    d = health.SolveDiagnostics(r)
+    assert d.diverged and not d.converged
+    assert "diverged" in d.summary()
+
+
+def test_diagnostics_stalled():
+    # fast early drop, then flat for the whole second half, far from tol
+    r = jnp.asarray([1.0, 1e-2, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3])
+    d = health.SolveDiagnostics(r)
+    assert d.stalled and not d.converged and not d.diverged
+    assert "stalled" in d.summary()
+
+
+def test_diagnostics_multi_rhs_worst_column_governs():
+    good = jnp.asarray([1.0, 1e-5, 1e-10])
+    flat = jnp.asarray([1.0, 0.9, 0.8])
+    d = health.SolveDiagnostics(jnp.stack([good, flat], axis=1))
+    assert not d.converged  # column 2 is nowhere near
+    assert d.reduction.shape == (2,)
+    assert d.reduction[0] < health.CONVERGED_REL <= d.reduction[1]
+
+
+# -- solver integration ------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def xy():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (300, 4))
+    y = jnp.sin(2 * x[:, 0]) + 0.1 * x[:, 1]
+    return x, y
+
+
+def test_falkon_fit_attaches_diagnostics(xy):
+    x, y = xy
+    m = falkon_fit(KERN, x, y, x[:40], 1e-4, iters=20, backend="jnp")
+    assert m.diagnostics is not None
+    assert m.diagnostics.residuals.shape == (21,)
+    # a healthy small problem makes real progress and never diverges
+    assert not m.diagnostics.diverged
+    assert float(m.diagnostics.reduction.max()) < 1e-2
+
+
+def test_falkon_fit_host_path_diagnostics(xy):
+    """The callback (host-CG) path records the same trajectory shape."""
+    x, y = xy
+    seen = []
+    m = falkon_fit(KERN, x, y, x[:40], 1e-4, iters=10, backend="jnp",
+                   callback=lambda i, model: seen.append(i))
+    assert len(seen) == 10
+    assert m.diagnostics is not None and m.diagnostics.residuals.shape == (11,)
+    assert not m.diagnostics.diverged
+
+
+def test_falkon_fit_finite_fence_opt_in(xy):
+    """check_finite=True turns a NaN-poisoned solve into a NonFiniteError
+    instead of silently returning NaN alpha."""
+    x, y = xy
+    y_bad = y.at[0].set(jnp.nan)
+    m = falkon_fit(KERN, x, y_bad, x[:40], 1e-4, iters=5, backend="jnp")
+    assert bool(jnp.any(jnp.isnan(m.alpha)))  # default: unfenced hot path
+    with pytest.raises(health.NonFiniteError):
+        falkon_fit(KERN, x, y_bad, x[:40], 1e-4, iters=5, backend="jnp",
+                   check_finite=True)
+
+
+def test_direct_solvers_always_fenced(xy):
+    """nystrom_krr / exact_krr are eager oracles: their fences are always
+    armed, so poisoned targets raise rather than fit a NaN model."""
+    x, y = xy
+    y_bad = y.at[3].set(jnp.inf)
+    with pytest.raises(health.NonFiniteError):
+        nystrom_krr(KERN, x, y_bad, x[:30], 1e-4, backend="jnp")
+    with pytest.raises(health.NonFiniteError):
+        exact_krr(KERN, x[:60], y_bad[:60], 1e-4, backend="jnp")
+
+
+def test_estimator_threads_check_finite(xy):
+    from repro.api import FalkonRegressor, FitConfig
+    x, y = xy
+    y_bad = y.at[0].set(jnp.nan)
+    est = FalkonRegressor(kernel=KERN,
+                          config=FitConfig(lam=1e-4, iters=5, backend="jnp",
+                                           check_finite=True))
+    with pytest.raises(health.NonFiniteError):
+        est.fit(x, y_bad)
+
+
+def test_event_log_bounded_and_filterable():
+    for i in range(600):
+        health.record_event("spam", i=i)
+    assert len(health.events()) == 512  # deque maxlen
+    health.record_event("other")
+    assert len(health.events("other")) == 1
+    health.clear_events()
+    assert health.events() == []

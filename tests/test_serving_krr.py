@@ -90,6 +90,35 @@ def test_predict_convenience_and_validation(model):
         server.submit(jnp.zeros((5, 8)))
 
 
+def test_non_finite_request_rejected_at_submit(model):
+    """One NaN/Inf request must not reach a packed wave (it would poison
+    every co-packed request's Gram tile): submit itself raises, and the
+    requests around it still serve exactly."""
+    server = KrrServer(model, min_bucket=32)
+    good = _requests([(20, 9), (21, 5)])
+    r0 = server.submit(good[0])
+    with pytest.raises(ValueError, match="non-finite"):
+        server.submit(jnp.zeros((4, 6)).at[1, 2].set(jnp.nan))
+    with pytest.raises(ValueError, match="non-finite"):
+        server.submit(jnp.full((4, 6), jnp.inf))
+    r1 = server.submit(good[1])
+    out = server.flush()
+    for rid, q in zip((r0, r1), good):
+        np.testing.assert_allclose(out[rid], model.predict(q),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_flush_drain_is_linear(model):
+    """The queue is a deque: draining N single-row requests does N popleft
+    O(1) steps (the old list.pop(0) made this quadratic). Guard the
+    behavior: a long queue flushes completely and in submit order."""
+    server = KrrServer(model, max_wave=256, min_bucket=32)
+    rids = [server.submit(_requests([(s, 1)])[0]) for s in range(300)]
+    out = server.flush()
+    assert server.pending_rows == 0 and len(out) == 300
+    assert set(out) == set(rids)
+
+
 def test_reset_clears_queue_and_stats(model):
     server = KrrServer(model)
     server.submit(_requests([(12, 9)])[0])

@@ -74,6 +74,11 @@ def test_serve_engine_continuous_batching():
     cfg = smoke(get_config("phi3-mini-3.8b"))
     state = train_state_init(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(params=state.params, cfg=cfg, max_len=32, batch_slots=3)
+    # an empty prompt has no logits to sample from: clear error, not an
+    # unbound-variable crash (and the engine state stays untouched)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.add_request(0, [])
+    assert not bool(eng.active[0])
     eng.add_request(0, [1, 2, 3])
     eng.add_request(1, [4, 5])
     for _ in range(4):

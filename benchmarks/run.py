@@ -7,13 +7,15 @@
   bench_fig45_falkon          Fig. 4/5: FALKON-BLESS vs FALKON-UNI per iter
   bench_multi_rhs             multi-RHS block-CG: k outputs / CV folds in
                               one solve vs the per-column loop
+  bench_bigk                  out-of-core: million-row FALKON through the
+                              stream backend, peak device bytes recorded
   bench_lm_steps              framework: smoke-scale train/decode step times
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
 CPU-scale sizes; every timing is post-warmup (jit cache hot).
 
 Flags:
-  --backend {jnp,pallas,sharded}  pin the kernel-operator backend
+  --backend {jnp,pallas,sharded,stream}  pin the kernel-operator backend
   --json PATH      also write the records as a JSON array (the perf
                    trajectory artifact future perf PRs diff against)
   --repeats N      time each measurement N times, report the median
@@ -250,6 +252,49 @@ def bench_multi_rhs(n: int = 3000, m: int = 256, k: int = 8, folds: int = 4,
          f"fits_naive={len(lams) * folds}")
 
 
+def bench_bigk(n: int = 1_000_000, m: int = 1024, d: int = 10, iters: int = 3,
+               backend=None) -> None:
+    """Out-of-core FALKON (DESIGN.md §10): fit + predict at n rows through
+    the stream backend with X host-resident, emitting the subsystem's peak
+    device bytes next to wall time. ``knmMB`` in the derived field is what a
+    materialized (n, M) K_nM would cost — the peak staying orders of
+    magnitude below it is the whole point. Timed once with no warmup pass:
+    the wall time is streaming compute (compile is seconds against minutes),
+    and a full-size warmup would double a minutes-long bench.
+    """
+    from repro.core import resolve_backend
+    from repro.stream import (ChunkStore, StreamBackend, peak_device_bytes,
+                              reset_peak_device_bytes)
+
+    inner = "jnp" if backend in (None, "stream") else backend
+    be = StreamBackend(inner=resolve_backend(inner))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d), dtype=np.float32)
+    y = np.sin(3.0 * x[:, 0]) * np.cos(x[:, 1])
+    store = ChunkStore(x, y.astype(np.float32))
+    centers = store[np.linspace(0, n - 1, m).astype(np.int64)]
+    kern = make_kernel("gaussian", sigma=2.0)
+    knm_mb = 4.0 * n * m / 1e6
+
+    reset_peak_device_bytes()
+    t0 = time.perf_counter()
+    model = falkon_fit(kern, store, jnp.asarray(y), centers, 1e-6,
+                       iters=iters, backend=be)
+    jax.block_until_ready(model.alpha)
+    us_fit = (time.perf_counter() - t0) * 1e6
+    peak_mb = peak_device_bytes() / 1e6
+    emit("bigk.falkon_fit", us_fit,
+         f"n={n};M={m};iters={iters};peakMB={peak_mb:.1f};knmMB={knm_mb:.0f}")
+
+    reset_peak_device_bytes()
+    t0 = time.perf_counter()
+    pred = model.predict(store)
+    jax.block_until_ready(pred)
+    us_pred = (time.perf_counter() - t0) * 1e6
+    emit("bigk.predict", us_pred,
+         f"n={n};M={m};peakMB={peak_device_bytes() / 1e6:.1f};knmMB={knm_mb:.0f}")
+
+
 def bench_lm_steps(backend=None) -> None:
     """Smoke-scale per-arch step timing (framework sanity, not paper)."""
     from repro.configs import get_config, list_archs, smoke
@@ -299,6 +344,9 @@ BENCHES = {
     "multi_rhs": (bench_multi_rhs,
                   lambda backend: bench_multi_rhs(n=600, m=96, k=8, iters=12,
                                                   backend=backend)),
+    "bigk": (bench_bigk,
+             lambda backend: bench_bigk(n=20_000, m=256, iters=3,
+                                        backend=backend)),
     "lm": (bench_lm_steps, bench_lm_steps),
 }
 
@@ -306,7 +354,8 @@ BENCHES = {
 def main() -> None:
     global _REPEATS
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
+    ap.add_argument("--backend",
+                    choices=["auto", "jnp", "pallas", "sharded", "stream"],
                     default="auto", help="kernel-operator backend for BLESS/FALKON")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write records as a JSON array to PATH")

@@ -41,7 +41,7 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--m-cap", type=int, default=1500)
     ap.add_argument("--ckpt", default="/tmp/falkon_ckpt")
-    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
+    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded", "stream"],
                     default="auto",
                     help="kernel-operator backend (auto: BLESS by platform "
                          "heuristic / REPRO_BACKEND env, FALKON data-parallel)")

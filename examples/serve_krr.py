@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--requests", type=int, default=200)
-    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded"],
+    ap.add_argument("--backend", choices=["auto", "jnp", "pallas", "sharded", "stream"],
                     default="auto", help="kernel-operator backend override")
     args = ap.parse_args()
     backend = None if args.backend == "auto" else args.backend

@@ -41,6 +41,7 @@ from ..core.leverage import CenterSet
 from ..families import KernelFamily, kernel_family_names, register_kernel_family
 from ..serving.async_krr import AsyncKrrServer, ServeConfig
 from ..serving.krr import KrrServer
+from ..stream import ChunkStore, StreamBackend
 from .estimators import ExactKrr, FalkonRegressor, FitConfig, NystromRegressor
 from .samplers import (
     BlessRSampler,
@@ -70,4 +71,6 @@ __all__ = [
     "kernel_family_names",
     # shared data type + serving
     "CenterSet", "KrrServer", "AsyncKrrServer", "ServeConfig",
+    # out-of-core streaming (DESIGN.md §10)
+    "ChunkStore", "StreamBackend",
 ]

@@ -32,9 +32,19 @@ from ..core.falkon import FalkonModel, falkon_fit
 from ..core.gram import BackendLike, Kernel, make_kernel
 from ..core.leverage import CenterSet
 from ..core.nystrom import exact_krr, nystrom_krr
+from ..stream import ChunkStore
 from .samplers import BlessSampler, Sampler
 
 Array = jax.Array
+
+
+def _as_data(x) -> Array | ChunkStore:
+    """Device array for array inputs; a host-resident ``ChunkStore`` passes
+    through untouched so the streaming paths (falkon_fit's host CG, the
+    samplers, predict) keep X out of device memory. The direct O(n^2+) paths
+    (``ExactKrr``) still ``jnp.asarray`` explicitly — materializing there is
+    the algorithm, not an accident."""
+    return x if isinstance(x, ChunkStore) else jnp.asarray(x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +90,7 @@ class _KrrEstimator:
         """Predictions through the kernel-operator seam ((n,) or (n, k))."""
         if self.model_ is None:
             raise RuntimeError(f"{type(self).__name__} is not fitted; call .fit first")
-        return self.model_.predict(jnp.asarray(x), backend=self.config.backend)
+        return self.model_.predict(_as_data(x), backend=self.config.backend)
 
     def score(self, x: Array, y: Array) -> float:
         """Coefficient of determination R^2 (uniform average over outputs)."""
@@ -125,7 +135,7 @@ class FalkonRegressor(_KrrEstimator):
         (e.g. one BLESS ladder shared across estimators); ``callback(i,
         model)`` switches to the host CG loop for per-iteration metrics
         (single-output only)."""
-        x = jnp.asarray(x)
+        x = _as_data(x)
         y = jnp.asarray(y)
         cfg = self.config
         # warm start contract (sklearn-style): the caller asserts X is the
@@ -165,7 +175,7 @@ class NystromRegressor(_KrrEstimator):
 
     def fit(self, x: Array, y: Array, *, key: Array | None = None) -> "NystromRegressor":
         """Sample centers and solve Def. 4 directly; ``y`` (n,) or (n, k)."""
-        x = jnp.asarray(x)
+        x = _as_data(x)
         cs = self.sampler.sample(self._key(key), x, self.kernel,
                                  backend=self.config.backend)
         m = int(cs.count)

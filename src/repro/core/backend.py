@@ -68,8 +68,22 @@ PALLAS_GRAM_TILES = ((1024, (128, 128)), (8192, (256, 256)), (None, (512, 256)))
 PALLAS_QUADFORM_TILES = ((1024, (128, 128)), (8192, (256, 256)), (None, (256, 256)))
 PALLAS_MATVEC_BN = ((4096, 256), (None, 512))
 
-_PALLAS_MIN_ROWS = 256  # below this a single jnp block beats tile padding
+# Backend-selection thresholds. The baked-in defaults were measured with
+# ``tools/autotune_backend.py`` (which sweeps each pair of backends over a
+# row grid and reports the timing crossover) on the reference CPU container;
+# rerun it on real hardware and either edit these or set the printed
+# ``REPRO_*_MIN_ROWS`` env vars — the env always wins (read per call, so
+# tests and deploys can flip them without reimports). docs/backends.md has
+# the calibration recipe.
+_PALLAS_MIN_ROWS = 256  # interpret-mode never crosses over off-TPU; on-TPU floor
 _SHARD_MIN_ROWS = 1 << 15  # below this collective latency beats the split
+_STREAM_MIN_ROWS = 1 << 21  # above this X (+ its Gram tiles) stops fitting HBM
+
+
+def _threshold(env: str, default: int) -> int:
+    """An autotuned threshold with its env override (empty/unset -> default)."""
+    raw = os.environ.get(env, "").strip()
+    return int(raw) if raw else default
 
 
 def _pick(table, size: int):
@@ -557,24 +571,41 @@ class GuardedBackend(Backend):
 # ---------------------------------------------------------------------------
 
 
+def _stream_backend() -> Backend:
+    """Lazy ``StreamBackend`` factory — ``repro.stream`` imports this module,
+    so the import has to happen at resolve time, not at module import."""
+    from ..stream import StreamBackend
+
+    return StreamBackend()
+
+
 def default_backend(n: int | None = None) -> Backend:
     """Platform + problem-size heuristic.
 
     TPU -> fused Pallas kernels (compiled); multiple devices with enough rows
-    to amortize the collectives -> shard_map; otherwise the jnp streamer.
-    ``n`` is the dataset row count when the caller knows it.
+    to amortize the collectives -> shard_map; otherwise the jnp streamer —
+    and past ``REPRO_STREAM_MIN_ROWS`` the pick is wrapped in the out-of-core
+    ``StreamBackend`` (the chosen backend keeps building each tile, but X is
+    streamed chunk-by-chunk instead of staged whole). ``n`` is the dataset
+    row count when the caller knows it.
 
     The ``REPRO_BACKEND`` env var overrides the heuristic entirely — set it
-    to a registry name ("jnp" | "pallas" | "sharded") to pin a backend on
-    hardware runs without code edits ("auto"/"" fall through to the
-    heuristic). Calibration story: ``_PALLAS_MIN_ROWS`` and
-    ``_SHARD_MIN_ROWS`` above are educated CPU-container guesses — on real
-    TPU / multi-host hardware, sweep ``REPRO_BACKEND`` against
-    ``benchmarks/run.py --json`` at your production n and move the
-    thresholds to where the backends' timing curves cross.
+    to a registry name ("jnp" | "pallas" | "sharded" | "stream" | ...) or a
+    composite "stream:<inner>" spec to pin a backend on hardware runs
+    without code edits ("auto"/"" fall through to the heuristic). The
+    thresholds above are autotuned defaults (``tools/autotune_backend.py``);
+    ``REPRO_PALLAS_MIN_ROWS`` / ``REPRO_SHARD_MIN_ROWS`` /
+    ``REPRO_STREAM_MIN_ROWS`` override them per deployment.
     """
     env = os.environ.get("REPRO_BACKEND", "").strip().lower()
     if env and env != "auto":
+        if ":" in env:
+            from .gram import resolve_backend
+
+            try:
+                return resolve_backend(env)
+            except ValueError as e:
+                raise ValueError(f"REPRO_BACKEND={env!r}: {e}") from None
         try:
             return _ENV_BACKENDS[env]()
         except KeyError:
@@ -583,19 +614,30 @@ def default_backend(n: int | None = None) -> Backend:
                 f"expected one of {sorted(_ENV_BACKENDS)} or 'auto'"
             ) from None
     platform = jax.default_backend()
-    if platform == "tpu" and (n is None or n >= _PALLAS_MIN_ROWS):
-        return PallasBackend()
-    if len(jax.devices()) > 1 and n is not None and n >= _SHARD_MIN_ROWS:
-        return ShardedBackend()
-    return JnpBackend()
+    picked: Backend | None = None
+    if platform == "tpu" and (n is None or n >= _threshold(
+            "REPRO_PALLAS_MIN_ROWS", _PALLAS_MIN_ROWS)):
+        picked = PallasBackend()
+    elif (len(jax.devices()) > 1 and n is not None
+          and n >= _threshold("REPRO_SHARD_MIN_ROWS", _SHARD_MIN_ROWS)):
+        picked = ShardedBackend()
+    else:
+        picked = JnpBackend()
+    if n is not None and n >= _threshold("REPRO_STREAM_MIN_ROWS",
+                                         _STREAM_MIN_ROWS):
+        from ..stream import StreamBackend
+
+        return StreamBackend(inner=picked)
+    return picked
 
 
 _ENV_BACKENDS: dict[str, Callable[[], Backend]] = {
     "jnp": JnpBackend, "pallas": PallasBackend, "sharded": ShardedBackend,
-    "guarded": GuardedBackend,
+    "guarded": GuardedBackend, "stream": _stream_backend,
 }
 
 register_backend("jnp", JnpBackend)
 register_backend("pallas", PallasBackend)
 register_backend("sharded", ShardedBackend)
 register_backend("guarded", GuardedBackend)
+register_backend("stream", _stream_backend)

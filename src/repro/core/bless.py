@@ -168,7 +168,26 @@ def _dedup_centers(centers: CenterSet, lamn: Array, dbuf: int):
 def _rls_dedup(kernel, x_cand, cand_mask, x_all, centers, lamn, *, backend, dbuf):
     """Eq. 3 scores of candidates against a (possibly multiset) center set,
     deduplicated internally, through ``backend.rls_scores``. Clipped to
-    [_SCORE_FLOOR, 1]; 0 on invalid candidate slots."""
+    [_SCORE_FLOOR, 1]; 0 on invalid candidate slots.
+
+    Host-resident ``x_all`` (a ``repro.stream.ChunkStore``) takes a Python
+    branch instead of ``lax.cond``: the cond traces BOTH branches, and a
+    traced center gather would force the whole store onto the device. Only
+    reachable on non-jit-safe backends (the stream driver), so the jitted
+    ladder phases never see it; the empty-center case routes through
+    ``rls_scores`` with an all-masked buffer (exactly K_ii / lamn) so a
+    chunked ``x_cand`` never meets a raw ``kernel.diag``.
+    """
+    if not isinstance(x_all, jax.Array):
+        if int(centers.count) > 0:
+            dd_idx, dd_mask, dd_reg = _dedup_centers(centers, lamn, dbuf)
+            s = backend.rls_scores(kernel, x_cand, x_all[dd_idx], dd_mask,
+                                   dd_reg, lamn)
+        else:
+            s = backend.rls_scores(
+                kernel, x_cand, x_all[np.zeros((dbuf,), np.int32)],
+                jnp.zeros((dbuf,), bool), jnp.ones((dbuf,), jnp.float32), lamn)
+        return jnp.where(cand_mask, jnp.clip(s, _SCORE_FLOOR, 1.0), 0.0)
 
     def no_centers(_):
         return kernel.diag(x_cand) / lamn

@@ -176,6 +176,11 @@ def resolve_backend(spec: BackendLike = None, *, n: int | None = None) -> "Backe
     heuristic — so every core entry point gets hardware-appropriate
     contractions without callers naming one. ``n`` is the dataset row count
     when the caller knows it.
+
+    Composite specs ``"outer:inner"`` (e.g. ``"stream:pallas"``) resolve the
+    outer name, then hand it the resolved inner via its ``with_inner`` hook —
+    how the out-of-core streamer composes with a per-tile backend. The inner
+    part may itself be composite.
     """
     if spec is None:
         _ensure_backends_loaded()
@@ -184,12 +189,20 @@ def resolve_backend(spec: BackendLike = None, *, n: int | None = None) -> "Backe
         return default_backend(n)
     if isinstance(spec, str):
         _ensure_backends_loaded()
+        outer_name, _, inner_spec = spec.partition(":")
         try:
-            return _BACKEND_REGISTRY[spec]()
+            outer = _BACKEND_REGISTRY[outer_name]()
         except KeyError:
             raise ValueError(
-                f"unknown backend {spec!r}; registered: {sorted(_BACKEND_REGISTRY)}"
+                f"unknown backend {outer_name!r}; registered: {sorted(_BACKEND_REGISTRY)}"
             ) from None
+        if not inner_spec:
+            return outer
+        if not hasattr(outer, "with_inner"):
+            raise ValueError(
+                f"backend {outer_name!r} is not composable (no with_inner); "
+                f"cannot resolve {spec!r}")
+        return outer.with_inner(resolve_backend(inner_spec, n=n))
     return spec
 
 

@@ -1,0 +1,32 @@
+"""``repro.stream`` — the out-of-core streaming subsystem (DESIGN.md §10).
+
+``ChunkStore`` keeps (X, y) host-resident in fixed-size row chunks;
+``StreamBackend`` serves the full kernel-operator ``Backend`` protocol by
+double-buffered chunk streaming (copy chunk i+1 while contracting chunk i),
+so FALKON, the BLESS/Chen-Yang samplers, predict and the estimators run at
+n far beyond device memory without code changes — no (n, M) array is ever
+materialized. Registered as ``"stream"`` (``REPRO_BACKEND=stream``;
+``"stream:pallas"`` composes the per-tile contraction with another backend).
+"""
+from .backend import MATERIALIZE_ELEMS, StreamBackend
+from .store import (
+    STREAM_CHUNK,
+    ChunkStore,
+    default_chunk,
+    device_chunks,
+    device_memory_stats,
+    peak_device_bytes,
+    reset_peak_device_bytes,
+)
+
+__all__ = [
+    "ChunkStore",
+    "StreamBackend",
+    "STREAM_CHUNK",
+    "MATERIALIZE_ELEMS",
+    "default_chunk",
+    "device_chunks",
+    "device_memory_stats",
+    "peak_device_bytes",
+    "reset_peak_device_bytes",
+]

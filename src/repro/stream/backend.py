@@ -1,0 +1,216 @@
+"""``StreamBackend`` — the full ``Backend`` protocol over chunked host data.
+
+Every K_nM-shaped contraction is served as a double-buffered loop over the
+``repro.stream.store`` chunk iterator: while chunk i's (chunk, M) Gram tile
+is built and contracted on device, the host->device copy of chunk i+1 is
+already in flight. The tile is consumed immediately — reduced into the
+(M,)/(M, k) accumulator (``knm_quadratic`` / ``knm_t``), the (R,) score
+vector (``masked_quadform`` / ``rls_scores``), or the (n,)/(n, k) prediction
+(``knm_matvec``) — so no (n, M) array ever exists, the same tiling argument
+as memory-efficient attention. ``gram_block`` is the one protocol method
+whose *output* is (n, m); it carries an explicit element-count guard and
+raises past it rather than silently materializing.
+
+Composition: the per-tile contraction is delegated to an ``inner`` backend
+(``inner.gram_block`` builds each tile), so ``StreamBackend(inner=
+PallasBackend())`` runs the fused TPU kernels per tile and
+``StreamBackend(inner=ShardedBackend())`` shard_maps each tile over the
+local mesh — out-of-core capacity composed with single-tile speed. The
+registry spells this ``"stream:pallas"`` (see ``resolve_backend``).
+
+Accumulation order is the chunk order (row order), fixed and deterministic:
+repeated calls on the same data produce bit-identical results. The sum is
+associated differently from the jnp streamer's lax.scan (2048-row blocks vs
+``chunk``-row chunks), so cross-backend agreement is the documented 1e-4
+scale-relative parity, not bit-equality.
+
+``jit_safe`` is False — the loop needs the host — so fits through this
+backend take ``falkon_fit``'s host CG path and the BLESS ladder runs its
+eager phases, both of which already accept array-likes like ``ChunkStore``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from ..core.backend import Backend, JnpBackend, _quadform_from_chol
+from ..core.gram import Kernel
+from ..core.leverage import _chol_with_jitter
+from .store import _TRACKER, device_chunks
+
+Array = jax.Array
+
+#: ``gram_block`` materialization guard: refuse outputs above this many fp32
+#: elements (default 2^26 = 256 MB). Small-problem callers (K_MM, ladder
+#: levels, parity tests) pass untouched; an accidental (n, M) materialization
+#: at out-of-core n raises instead of silently defeating the subsystem.
+MATERIALIZE_ELEMS = 1 << 26
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk contraction steps.
+#
+# One function per seam method; each builds its (chunk, M) Gram tile through
+# the *inner* backend and reduces it on the spot. The jit-wrapped variants
+# (inner static — backends are frozen hashable dataclasses) are used when the
+# inner backend is jit-safe: the whole tile-build + reduce is then one
+# compiled call per chunk, and the uniform-chunk + single-tail layout keeps
+# the cache at <= 2 executables per (shapes, inner). Non-jit-safe inners
+# (Pallas, shard_map) run the same bodies eagerly — their dispatch needs
+# concrete tile parameters.
+# ---------------------------------------------------------------------------
+
+
+def _quad_chunk(kernel, xb, z, v, acc, *, inner):
+    g = inner.gram_block(kernel, xb, z)
+    return acc + g.T @ (g @ v)
+
+
+def _knmt_chunk(kernel, xb, z, yb, acc, *, inner):
+    return acc + inner.gram_block(kernel, xb, z).T @ yb
+
+
+def _matvec_chunk(kernel, xb, z, v, *, inner):
+    return inner.gram_block(kernel, xb, z) @ v
+
+
+def _quadform_chunk(kernel, xb, z, maskf, chol, *, inner):
+    g = inner.gram_block(kernel, xb, z) * maskf[None, :]
+    return _quadform_from_chol(chol, g)
+
+
+def _rls_chunk(kernel, xb, z, maskf, chol, lamn, *, inner):
+    g = inner.gram_block(kernel, xb, z) * maskf[None, :]
+    return (kernel.diag(xb) - _quadform_from_chol(chol, g)) / lamn
+
+
+_jit = partial(jax.jit, static_argnames=("inner",))
+_quad_chunk_jit = _jit(_quad_chunk)
+_knmt_chunk_jit = _jit(_knmt_chunk)
+_matvec_chunk_jit = _jit(_matvec_chunk)
+_quadform_chunk_jit = _jit(_quadform_chunk)
+_rls_chunk_jit = _jit(_rls_chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamBackend(Backend):
+    """Out-of-core streaming backend (see module docstring).
+
+    Attributes:
+      inner: the backend that builds each (chunk, M) Gram tile; jnp by
+        default, Pallas / shard_map via ``"stream:pallas"`` etc.
+      chunk: rows per device chunk; None defers to the ``ChunkStore``'s own
+        chunk size (or the platform default for device-resident inputs).
+      materialize_elems: the ``gram_block`` output-size guard (elements).
+    """
+
+    name: ClassVar[str] = "stream"
+    jit_safe: ClassVar[bool] = False
+    inner: Backend = dataclasses.field(default_factory=JnpBackend)
+    chunk: int | None = None
+    materialize_elems: int = MATERIALIZE_ELEMS
+
+    def with_inner(self, inner: Backend) -> "StreamBackend":
+        """This wrapper with its per-tile backend swapped — the composition
+        hook ``resolve_backend`` uses for ``"stream:<inner>"`` specs."""
+        return dataclasses.replace(self, inner=inner)
+
+    def _pick(self, eager: Callable, jitted: Callable) -> Callable:
+        return jitted if self.inner.jit_safe else eager
+
+    def _note_tile(self, rows: int, m: int) -> None:
+        _TRACKER.note_transient(4 * rows * m)
+
+    # -- protocol -----------------------------------------------------------
+
+    def gram_block(self, kernel: Kernel, x: Array, z: Array) -> Array:
+        """K(X, Z) (n, m) fp32, streamed chunk-by-chunk through the inner
+        backend — guarded: raises if the *output* exceeds
+        ``materialize_elems`` (this method's result is the one (n, m)
+        array the protocol cannot avoid)."""
+        n, m = x.shape[0], z.shape[0]
+        if n * m > self.materialize_elems:
+            raise ValueError(
+                f"stream backend refuses to materialize a ({n}, {m}) Gram "
+                f"block ({n * m} > materialize_elems={self.materialize_elems}"
+                "); out-of-core problems must go through the knm_* / "
+                "quadform operators, which never build (n, M) — or raise "
+                "StreamBackend(materialize_elems=...) if this block is "
+                "genuinely meant to exist")
+        blocks = []
+        for xb, _ in device_chunks(x, chunk=self.chunk):
+            self._note_tile(xb.shape[0], m)
+            blocks.append(self.inner.gram_block(kernel, xb, z))
+        return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=0)
+
+    def masked_quadform(self, kernel: Kernel, x_cand: Array, z: Array,
+                        mask: Array, reg: Array) -> Array:
+        """Eq. 3 quadratic form: factor the (Mbuf, Mbuf) K_JJ once, then
+        stream candidate chunks through one trsm/GEMM solve each."""
+        maskf = mask.astype(z.dtype)
+        kjj = (self.inner.gram_block(kernel, z, z)
+               * (maskf[:, None] * maskf[None, :]) + jnp.diag(reg))
+        chol = _chol_with_jitter(kjj)
+        step = self._pick(_quadform_chunk, _quadform_chunk_jit)
+        outs = []
+        for xb, _ in device_chunks(x_cand, chunk=self.chunk):
+            self._note_tile(xb.shape[0], z.shape[0])
+            outs.append(step(kernel, xb, z, maskf, chol, inner=self.inner))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    def rls_scores(self, kernel: Kernel, x_cand: Array, z: Array,
+                   z_mask: Array, reg: Array, lamn: Array) -> Array:
+        """Eq. 3 scores with the K_JJ factorization hoisted out of the chunk
+        loop (the inner backend's own fused scorer refactors it per call,
+        which would repeat the (Mbuf, Mbuf) Cholesky once per chunk)."""
+        maskf = z_mask.astype(x_cand.dtype if hasattr(x_cand, "dtype") else jnp.float32)
+        kjj = (self.inner.gram_block(kernel, z, z)
+               * (maskf[:, None] * maskf[None, :]) + jnp.diag(reg))
+        chol = _chol_with_jitter(kjj)
+        step = self._pick(_rls_chunk, _rls_chunk_jit)
+        outs = []
+        for xb, _ in device_chunks(x_cand, chunk=self.chunk):
+            self._note_tile(xb.shape[0], z.shape[0])
+            outs.append(step(kernel, xb, z, maskf, chol, lamn, inner=self.inner))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array):
+        """CG quadratic op v -> K_nM^T (K_nM v): every call re-streams X
+        from host with double-buffered copies, folding each (chunk, M) tile
+        into the (M,)/(M, k) accumulator in chunk order."""
+        m = z.shape[0]
+        step = self._pick(_quad_chunk, _quad_chunk_jit)
+
+        def op(v: Array) -> Array:
+            acc = jnp.zeros((m,) + v.shape[1:], jnp.float32)
+            for xb, _ in device_chunks(x, chunk=self.chunk):
+                self._note_tile(xb.shape[0], m)
+                acc = step(kernel, xb, z, v, acc, inner=self.inner)
+            return acc
+
+        return op
+
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+        """K_nM^T y with y chunked in lockstep with X; (n,) -> (M,) or an
+        (n, k) panel -> (M, k), one tile serving every column."""
+        m = z.shape[0]
+        step = self._pick(_knmt_chunk, _knmt_chunk_jit)
+        acc = jnp.zeros((m,) + y.shape[1:], jnp.float32)
+        for xb, yb in device_chunks(x, aux=y, chunk=self.chunk):
+            self._note_tile(xb.shape[0], m)
+            acc = step(kernel, xb, z, yb, acc, inner=self.inner)
+        return acc
+
+    def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
+        """K(X, Z) v — predict: per-chunk outputs concatenated to (n,) or
+        (n, k); the output is the only O(n) device array this path makes."""
+        outs = []
+        for xb, _ in device_chunks(x, chunk=self.chunk):
+            self._note_tile(xb.shape[0], z.shape[0])
+            outs.append(self._pick(_matvec_chunk, _matvec_chunk_jit)(
+                kernel, xb, z, v, inner=self.inner))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)

@@ -27,7 +27,7 @@ def _problem(n=400, m=64, d=6, seed=0):
 
 
 def test_registry_names_and_resolution():
-    assert backend_names() == ["guarded", "jnp", "pallas", "sharded"]
+    assert backend_names() == ["guarded", "jnp", "pallas", "sharded", "stream"]
     assert isinstance(resolve_backend("jnp"), JnpBackend)
     assert isinstance(resolve_backend("pallas"), PallasBackend)
     assert isinstance(resolve_backend("sharded"), ShardedBackend)
@@ -41,8 +41,13 @@ def test_registry_names_and_resolution():
 
 def test_default_backend_heuristic_off_tpu():
     # the suite runs on 1 CPU device: heuristic must land on the reference
+    # in-core, and wrap it in the out-of-core streamer past the row bound
+    from repro.stream import StreamBackend
     assert isinstance(default_backend(), JnpBackend)
-    assert isinstance(default_backend(10_000_000), JnpBackend)
+    assert isinstance(default_backend(1_000_000), JnpBackend)
+    big = default_backend(10_000_000)
+    assert isinstance(big, StreamBackend)
+    assert isinstance(big.inner, JnpBackend)
 
 
 def test_repro_backend_env_override(monkeypatch):

@@ -1,0 +1,330 @@
+"""Out-of-core streaming subsystem (repro.stream) — DESIGN.md §10.
+
+Parity is measured against JnpBackend (the numerical reference) at the
+documented scale-relative 1e-4 for single contractions; end-to-end FALKON
+through the stream backend is held to the CG-reassociation class (rel 1e-3)
+because the chunk accumulation order differs from the jnp streamer's scan.
+The peak-memory tests are the subsystem's core claim: no (n, M) array.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (JnpBackend, default_backend, falkon_fit, make_kernel,
+                        resolve_backend)
+from repro.core.bless import bless
+from repro.core.leverage import approx_rls_all, uniform_center_set
+from repro.stream import (ChunkStore, StreamBackend, device_chunks,
+                          peak_device_bytes, reset_peak_device_bytes)
+
+JNP = JnpBackend()
+KERN = make_kernel("gaussian", sigma=1.5)
+
+
+def _close(a, b, tol=1e-4):
+    a, b = np.asarray(a), np.asarray(b)
+    scale = max(1.0, float(np.max(np.abs(a))))
+    np.testing.assert_allclose(a, b, rtol=tol, atol=tol * scale)
+
+
+def _xy(n, d=5, k=None, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d), dtype=np.float32)
+    shape = (n,) if k is None else (n, k)
+    y = rng.standard_normal(shape).astype(np.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# ChunkStore data plane
+# ---------------------------------------------------------------------------
+
+
+def test_chunkstore_surface():
+    x, y = _xy(103, d=4)
+    store = ChunkStore(x, y, chunk=40)
+    assert store.shape == (103, 4) and store.ndim == 2 and len(store) == 103
+    assert store.n_chunks == 3  # 40 + 40 + 23: tail carries the remainder
+    sl = store.chunk_slices()
+    assert sl[0] == slice(0, 40) and sl[-1] == slice(80, 103)
+    np.testing.assert_array_equal(np.asarray(store[5]), x[5])
+    np.testing.assert_array_equal(np.asarray(store[10:20]), x[10:20])
+    idx = jnp.asarray([7, 3, 99])
+    np.testing.assert_array_equal(np.asarray(store[idx]), x[[7, 3, 99]])
+    np.testing.assert_array_equal(np.asarray(jnp.asarray(store)), x)  # O(n d) hatch
+
+
+def test_chunkstore_rejects_traced_gather():
+    store = ChunkStore(_xy(32)[0])
+    with pytest.raises(TypeError, match="concrete"):
+        jax.jit(lambda i: store[i])(jnp.asarray([0, 1]))
+
+
+def test_chunkstore_validates():
+    with pytest.raises(ValueError, match=r"\(n, d\)"):
+        ChunkStore(np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="rows"):
+        ChunkStore(np.zeros((4, 2), np.float32), np.zeros((5,), np.float32))
+
+
+def test_device_chunks_cover_exactly():
+    x, y = _xy(97, d=3)
+    store = ChunkStore(x, chunk=16)
+    xs, ys = [], []
+    for xb, yb in device_chunks(store, aux=y):
+        xs.append(np.asarray(xb))
+        ys.append(np.asarray(yb))
+    np.testing.assert_array_equal(np.concatenate(xs), x)
+    np.testing.assert_array_equal(np.concatenate(ys), y)
+
+
+# ---------------------------------------------------------------------------
+# Tile-size sweep: non-divisible n, chunk=1, chunk > n
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 16, 37, 137, 500])
+def test_chunk_size_sweep(chunk):
+    n, m = 137, 12  # prime n: never divisible by the sweep's chunks > 1
+    x, y = _xy(n)
+    z = jnp.asarray(x[:m])
+    xd = jnp.asarray(x)
+    store = ChunkStore(x, chunk=chunk)
+    sb = StreamBackend()
+    v = jnp.linspace(-1.0, 1.0, m)
+    _close(sb.knm_matvec(KERN, store, z, v), JNP.knm_matvec(KERN, xd, z, v))
+    _close(sb.knm_t(KERN, store, z, jnp.asarray(y)),
+           JNP.knm_t(KERN, xd, z, jnp.asarray(y)))
+    _close(sb.knm_quadratic(KERN, store, z)(v),
+           JNP.knm_quadratic(KERN, xd, z)(v))
+    _close(sb.gram_block(KERN, store, z), JNP.gram_block(KERN, xd, z))
+
+
+def test_backend_chunk_override_beats_store_chunk():
+    x, _ = _xy(64)
+    store = ChunkStore(x, chunk=8)
+    sb = StreamBackend(chunk=50)  # backend chunk wins over the store's
+    z = jnp.asarray(x[:6])
+    reset_peak_device_bytes()
+    sb.knm_matvec(KERN, store, z, jnp.ones((6,)))
+    # two 50-row (tail 14) chunks resident at once, plus their tiles
+    assert peak_device_bytes() <= 4 * (2 * 50 * x.shape[1] + 50 * 6) + 256
+
+
+# ---------------------------------------------------------------------------
+# Kernel families x multi-RHS panels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["gaussian", "laplacian", "linear",
+                                    "matern32", "cauchy"])
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_family_multirhs_parity(family, k):
+    kern = make_kernel(family, sigma=1.8)
+    n, m, d = 193, 14, 4
+    x, ym = _xy(n, d=d, k=k, seed=3)
+    y = ym[:, 0] if k == 1 else ym  # k=1 exercises the 1-D contract
+    z = jnp.asarray(x[:m])
+    xd = jnp.asarray(x)
+    store = ChunkStore(x, chunk=48)
+    sb = StreamBackend()
+    rng = np.random.default_rng(4)
+    v = jnp.asarray(rng.standard_normal((m,) if k == 1 else (m, k)).astype(np.float32))
+    out = sb.knm_matvec(kern, store, z, v)
+    assert out.shape == ((n,) if k == 1 else (n, k))
+    _close(out, JNP.knm_matvec(kern, xd, z, v))
+    kty = sb.knm_t(kern, store, z, jnp.asarray(y))
+    assert kty.shape == ((m,) if k == 1 else (m, k))
+    _close(kty, JNP.knm_t(kern, xd, z, jnp.asarray(y)))
+    _close(sb.knm_quadratic(kern, store, z)(v),
+           JNP.knm_quadratic(kern, xd, z)(v))
+
+
+def test_quadform_and_rls_parity():
+    n, mbuf = 211, 16
+    x, _ = _xy(n, seed=5)
+    xd = jnp.asarray(x)
+    store = ChunkStore(x, chunk=64)
+    sb = StreamBackend()
+    cs = uniform_center_set(jnp.arange(12), n, mbuf)
+    z = xd[cs.idx]
+    lamn = jnp.asarray(1e-2 * n, jnp.float32)
+    reg = jnp.where(cs.mask, lamn * cs.weight, 1.0)
+    _close(sb.masked_quadform(KERN, store, z, cs.mask, reg),
+           JNP.masked_quadform(KERN, xd, z, cs.mask, reg))
+    _close(sb.rls_scores(KERN, store, z, cs.mask, reg, lamn),
+           JNP.rls_scores(KERN, xd, z, cs.mask, reg, lamn))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: falkon_fit / predict / BLESS on a host-resident store
+# ---------------------------------------------------------------------------
+
+
+def test_falkon_fit_predict_parity():
+    n, m, k = 1200, 48, 3
+    x, ym = _xy(n, d=6, k=k, seed=7)
+    z = jnp.asarray(x[:m])
+    store = ChunkStore(x, chunk=256)
+    lam = 1e-4
+    ref = falkon_fit(KERN, jnp.asarray(x), jnp.asarray(ym), z, lam, iters=12,
+                     backend=JNP, fused=False)
+    mod = falkon_fit(KERN, store, jnp.asarray(ym), z, lam, iters=12,
+                     backend=StreamBackend())
+    xq = jnp.asarray(x[:200])
+    p_ref, p_str = ref.predict(xq, backend=JNP), mod.predict(xq)
+    # chunk-order accumulation reassociates the CG sums: rel 1e-3 class
+    rel = float(jnp.max(jnp.abs(p_ref - p_str)) / jnp.max(jnp.abs(p_ref)))
+    assert rel < 1e-3
+    # predict straight off the store as well (the serving path at big n)
+    p_store = mod.predict(store)
+    assert p_store.shape == (n, k)
+    rel = float(jnp.max(jnp.abs(p_store[:200] - p_ref)) / jnp.max(jnp.abs(p_ref)))
+    assert rel < 1e-3
+
+
+def test_bless_on_store_matches_jnp_scale():
+    n = 900
+    x, _ = _xy(n, d=4, seed=11)
+    key = jax.random.PRNGKey(2)
+    lam = 2e-3
+    res_ref = bless(key, jnp.asarray(x), KERN, lam, backend=JNP, m_cap=300)
+    res_str = bless(key, ChunkStore(x, chunk=200), KERN, lam,
+                    backend=StreamBackend(), m_cap=300)
+    assert len(res_str.levels) == len(res_ref.levels)
+    m_ref, m_str = res_ref.final.m_h, res_str.final.m_h
+    # same draws up to fp reassociation in the scores: sizes agree closely
+    assert 0.5 * m_ref <= m_str <= 2.0 * m_ref
+    # the sampled set must score equivalently through both paths
+    s_ref = approx_rls_all(KERN, jnp.asarray(x), res_str.final.centers,
+                           jnp.asarray(lam), backend=JNP)
+    s_str = approx_rls_all(KERN, ChunkStore(x, chunk=200),
+                           res_str.final.centers, jnp.asarray(lam),
+                           backend=StreamBackend())
+    _close(s_str, s_ref, tol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# The memory claim: no (n, M) materialization
+# ---------------------------------------------------------------------------
+
+
+def test_peak_memory_stays_far_below_knm():
+    n, m, d, chunk = 60_000, 64, 8, 4096
+    x, y = _xy(n, d=d, seed=13)
+    store = ChunkStore(x, y, chunk=chunk)
+    z = store[np.arange(m)]
+    sb = StreamBackend()
+    reset_peak_device_bytes()
+    op = sb.knm_quadratic(KERN, store, z)
+    v = jnp.ones((m,), jnp.float32)
+    jax.block_until_ready(op(v))
+    jax.block_until_ready(sb.knm_t(KERN, store, z, jnp.asarray(y)))
+    peak = peak_device_bytes()
+    knm_bytes = 4 * n * m  # what a materialized K_nM would cost
+    working_set = 4 * (2 * chunk * d + chunk * m)  # 2 chunks + 1 tile
+    assert peak <= working_set + 4 * 2 * chunk  # slack: y chunks
+    assert peak < knm_bytes / 10
+    # and the bound is n-independent: double n, same working set
+    x2, y2 = _xy(2 * n, d=d, seed=14)
+    reset_peak_device_bytes()
+    jax.block_until_ready(
+        sb.knm_quadratic(KERN, ChunkStore(x2, chunk=chunk), z)(v))
+    assert peak_device_bytes() <= working_set + 4 * 2 * chunk
+
+
+def test_compiled_chunk_step_memory_is_n_independent():
+    """Cost-analysis proof: the compiled per-chunk program's temp footprint
+    depends on (chunk, M), never on n — streaming 10x the rows reuses the
+    same executable with the same temporary allocations."""
+    from repro.stream.backend import _quad_chunk
+
+    m, d, chunk = 32, 6, 512
+    z = jnp.zeros((m, d), jnp.float32)
+    v = jnp.zeros((m,), jnp.float32)
+    acc = jnp.zeros((m,), jnp.float32)
+    xb = jnp.zeros((chunk, d), jnp.float32)
+    step = jax.jit(lambda *a: _quad_chunk(KERN, *a, inner=JNP))
+    compiled = step.lower(xb, z, v, acc).compile()
+    analysis = compiled.memory_analysis()
+    if analysis is None:  # platform without memory analysis
+        pytest.skip("memory_analysis unavailable")
+    temp = int(analysis.temp_size_in_bytes)
+    # the footprint is a few (chunk, m) tiles — nothing anywhere near (n, m)
+    assert temp <= 4 * chunk * m * 8
+
+
+def test_gram_block_materialization_guard():
+    x, _ = _xy(4096, d=3)
+    store = ChunkStore(x, chunk=1024)
+    z = store[np.arange(8)]
+    sb = StreamBackend(materialize_elems=4096 * 8 - 1)
+    with pytest.raises(ValueError, match="refuses to materialize"):
+        sb.gram_block(KERN, store, z)
+    # raising the guard (small problems) streams and concatenates fine
+    ok = StreamBackend().gram_block(KERN, store, z)
+    assert ok.shape == (4096, 8)
+
+
+# ---------------------------------------------------------------------------
+# Registry / composition / selection
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_composition():
+    assert isinstance(resolve_backend("stream"), StreamBackend)
+    comp = resolve_backend("stream:pallas")
+    assert isinstance(comp, StreamBackend)
+    assert comp.inner.name == "pallas"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("stream:cuda")
+    with pytest.raises(ValueError, match="not composable"):
+        resolve_backend("jnp:pallas")
+
+
+def test_env_stream_spec(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "stream")
+    assert isinstance(default_backend(), StreamBackend)
+    monkeypatch.setenv("REPRO_BACKEND", "stream:jnp")
+    be = default_backend()
+    assert isinstance(be, StreamBackend) and isinstance(be.inner, JnpBackend)
+    monkeypatch.setenv("REPRO_BACKEND", "stream:cuda")
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        default_backend()
+
+
+def test_stream_threshold_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_STREAM_MIN_ROWS", "1000")
+    be = default_backend(2000)
+    assert isinstance(be, StreamBackend)
+    assert isinstance(be.inner, JnpBackend)  # wraps the heuristic's pick
+    monkeypatch.setenv("REPRO_STREAM_MIN_ROWS", "100000")
+    assert isinstance(default_backend(2000), JnpBackend)
+
+
+def test_with_inner_is_pure():
+    base = StreamBackend(chunk=1000)
+    swapped = base.with_inner(JnpBackend(block=64))
+    assert swapped.chunk == 1000 and swapped.inner == JnpBackend(block=64)
+    assert base.inner == JnpBackend()  # frozen: original untouched
+    assert dataclasses.asdict(base)  # still a plain frozen dataclass
+
+
+def test_estimator_front_door_accepts_store():
+    from repro.api import ChunkStore as ApiChunkStore
+    from repro.api import FalkonRegressor, FitConfig, UniformSampler
+
+    assert ApiChunkStore is ChunkStore
+    n = 600
+    x, y = _xy(n, d=4, seed=17)
+    est = FalkonRegressor(
+        kernel=KERN, sampler=UniformSampler(m=32),
+        config=FitConfig(lam=1e-4, iters=8, backend=StreamBackend()))
+    est.fit(ChunkStore(x, chunk=128), jnp.asarray(y[:, 0] if y.ndim == 2 else y))
+    pred = est.predict(ChunkStore(x, chunk=128))
+    assert pred.shape == (n,)
+    ref = est.predict(jnp.asarray(x))
+    _close(pred, ref, tol=1e-4)

@@ -1,0 +1,151 @@
+"""Calibrate the ``default_backend()`` selection thresholds by measurement.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python tools/autotune_backend.py [--devices N] [--json PATH]
+
+Sweeps the kernel-operator backends over a geometric row grid with the
+benchmark suite's representative contraction (the FALKON CG quadratic op —
+build + one application, the shape that dominates every fit) and reports,
+per backend pair, the smallest n where the contender beats the incumbent:
+
+  * jnp vs pallas     -> REPRO_PALLAS_MIN_ROWS   (only meaningful on TPU;
+                         interpret mode never crosses over, reported as such)
+  * jnp vs sharded    -> REPRO_SHARD_MIN_ROWS    (needs > 1 device; use
+                         --devices N to probe with N host-platform devices)
+  * device vs stream  -> REPRO_STREAM_MIN_ROWS   (the stream backend trades
+                         tile-loop overhead for out-of-core capacity; its
+                         threshold is a *memory* bound, so the probe reports
+                         the overhead ratio at the largest in-core n plus the
+                         n where X + one (n, M) tile would exceed --mem-gb)
+
+Prints ready-to-paste ``export REPRO_*_MIN_ROWS=...`` lines; the baked-in
+defaults in ``src/repro/core/backend.py`` came from this probe on the
+reference CPU container. See docs/backends.md ("Selection") for how the
+thresholds are consumed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse() -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices (XLA flag; probes "
+                         "the sharded backend on CPU)")
+    ap.add_argument("--sizes", default="512,2048,8192,32768,131072",
+                    help="comma-separated row grid")
+    ap.add_argument("--m", type=int, default=512, help="center count M")
+    ap.add_argument("--d", type=int, default=10, help="feature dim")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per point; median reported")
+    ap.add_argument("--mem-gb", type=float, default=8.0,
+                    help="device memory budget the stream threshold protects")
+    ap.add_argument("--json", default=None, help="also dump raw timings")
+    return ap.parse_args()
+
+
+ARGS = _parse()
+if ARGS.devices > 1:  # must precede the jax import
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={ARGS.devices}")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import JnpBackend, PallasBackend, ShardedBackend, make_kernel  # noqa: E402
+from repro.stream import ChunkStore, StreamBackend  # noqa: E402
+
+
+def _time_quadratic(backend, kern, x, z, v, repeats: int) -> float:
+    """Median seconds for (build the CG quadratic op, apply it once) —
+    the per-iteration unit of a FALKON fit."""
+
+    def run():
+        out = backend.knm_quadratic(kern, x, z)(v)
+        jax.block_until_ready(out)
+
+    run()  # warmup / compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _crossover(grid: list[int], incumbent: list[float],
+               contender: list[float]) -> int | None:
+    """Smallest n from which the contender stays faster; None if never."""
+    for i, n in enumerate(grid):
+        if all(c < b for c, b in zip(contender[i:], incumbent[i:])):
+            return n
+    return None
+
+
+def main() -> None:
+    sizes = [int(s) for s in ARGS.sizes.split(",")]
+    kern = make_kernel("gaussian", sigma=2.0)
+    rng = np.random.default_rng(0)
+    m, d = ARGS.m, ARGS.d
+    z = jnp.asarray(rng.standard_normal((m, d), dtype=np.float32))
+    v = jnp.ones((m,), jnp.float32)
+
+    backends: dict[str, object] = {"jnp": JnpBackend(), "pallas": PallasBackend()}
+    if len(jax.devices()) > 1:
+        backends["sharded"] = ShardedBackend()
+    else:
+        print("# single device: sharded not probed (rerun with --devices N)")
+    backends["stream"] = StreamBackend()
+
+    timings: dict[str, list[float]] = {k: [] for k in backends}
+    for n in sizes:
+        xh = rng.standard_normal((n, d), dtype=np.float32)
+        xd = jnp.asarray(xh)
+        for name, be in backends.items():
+            x = ChunkStore(xh) if name == "stream" else xd
+            t = _time_quadratic(be, kern, x, z, v, ARGS.repeats)
+            timings[name].append(t)
+            print(f"n={n:>8}  {name:<8} {t * 1e3:9.2f} ms", flush=True)
+
+    print()
+    on_tpu = jax.default_backend() == "tpu"
+    cross_p = _crossover(sizes, timings["jnp"], timings["pallas"])
+    if cross_p is not None and on_tpu:
+        print(f"export REPRO_PALLAS_MIN_ROWS={cross_p}")
+    else:
+        why = "interpret mode" if not on_tpu else "no crossover on this grid"
+        print(f"# pallas never beats jnp here ({why}); REPRO_PALLAS_MIN_ROWS "
+              "only matters on real TPU")
+    if "sharded" in timings:
+        cross_s = _crossover(sizes, timings["jnp"], timings["sharded"])
+        if cross_s is not None:
+            print(f"export REPRO_SHARD_MIN_ROWS={cross_s}")
+        else:
+            print("# sharded never beats jnp on this grid; raise --sizes or "
+                  "keep the baked-in default")
+    # stream: a capacity threshold, not a speed crossover — report the
+    # overhead it costs and the n where in-core stops being an option.
+    ratio = timings["stream"][-1] / timings["jnp"][-1]
+    # in-core cost per row: the X row itself plus one K_nM tile row
+    n_mem = int(ARGS.mem_gb * 1e9 / (4 * (d + m)))
+    print(f"# stream overhead at n={sizes[-1]}: {ratio:.2f}x the in-core jnp "
+          "path (tile-loop + H2D)")
+    print(f"export REPRO_STREAM_MIN_ROWS={1 << (n_mem - 1).bit_length() >> 1}"
+          f"  # ~{ARGS.mem_gb:g} GB budget: X+(tile,M) rows ~"
+          f" {4 * (d + m)} B/row -> n ~ {n_mem:.2e}")
+    if ARGS.json:
+        with open(ARGS.json, "w") as f:
+            json.dump({"sizes": sizes, "timings": timings,
+                       "m": m, "d": d}, f, indent=1)
+        print(f"# wrote {ARGS.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

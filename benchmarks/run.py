@@ -7,6 +7,8 @@
   bench_fig45_falkon          Fig. 4/5: FALKON-BLESS vs FALKON-UNI per iter
   bench_multi_rhs             multi-RHS block-CG: k outputs / CV folds in
                               one solve vs the per-column loop
+  bench_scenarios             scenario layer: mask-panel tax on the quad op
+                              (exact CV), classifier fit, variance scorer
   bench_bigk                  out-of-core: million-row FALKON through the
                               stream backend, peak device bytes recorded
   bench_lm_steps              framework: smoke-scale train/decode step times
@@ -252,6 +254,56 @@ def bench_multi_rhs(n: int = 3000, m: int = 256, k: int = 8, folds: int = 4,
          f"fits_naive={len(lams) * folds}")
 
 
+def bench_scenarios(n: int = 3000, m: int = 256, k: int = 8, iters: int = 15,
+                    n_quad: int | None = None, backend=None) -> None:
+    """PR 9 scenario layer: the mask-panel tax on the streamed quadratic op
+    (the exact-CV mechanism — gate: masked <= 1.15x unmasked), one-vs-rest
+    classification as one panel solve, and the predictive-variance scorer.
+    The quad pair is timed back-to-back in one process, so the ratio in the
+    derived field is runner-speed independent; ``n_quad`` sizes that pair
+    separately so the smoke run keeps its timings above dispatch jitter."""
+    from repro.api import FalkonClassifier
+    from repro.core import resolve_backend
+
+    kern = make_kernel("gaussian", sigma=2.0)
+    key = jax.random.PRNGKey(0)
+    nq = n_quad if n_quad is not None else n
+    xq = _data(nq)
+    be = resolve_backend(backend, n=nq)
+    centers = xq[:m]
+    v = jax.random.normal(key, (m, k))
+    mask = (jax.random.uniform(key, (nq, k)) > 0.25).astype(jnp.float32)
+
+    # jit the ops as the fused fit does — the gate measures the mask
+    # multiply's compute tax, not eager dispatch overhead
+    quad = jax.jit(be.knm_quadratic(kern, xq, centers))
+    _, us_plain = timed(lambda: quad(v))
+    emit("scenarios.quad_unmasked", us_plain, f"n={nq};M={m};k={k}")
+    mquad = jax.jit(be.knm_quadratic(kern, xq, centers, mask=mask))
+    _, us_mask = timed(lambda: mquad(v))
+    emit("scenarios.quad_masked", us_mask,
+         f"n={nq};M={m};k={k};ratio={us_mask / us_plain:.3f};gate=1.15")
+
+    xtr, ytr, xte, yte = _classif(n, max(200, n // 5))
+    labels = np.asarray(jnp.where(ytr > 0, 1, 0))
+    clf = FalkonClassifier(kernel=kern, sampler=UniformSampler(m=m),
+                           config=FitConfig(lam=1e-5, iters=iters,
+                                            backend=backend),
+                           warm_start=True)
+
+    def fit_clf():
+        clf.fit(xtr, labels)
+        return clf.model_
+
+    _, us_fit = timed(fit_clf)
+    acc = clf.score(xte, np.asarray(jnp.where(yte > 0, 1, 0)))
+    emit("scenarios.classifier_fit", us_fit,
+         f"n={n};M={m};classes=2;acc={acc:.4f}")
+
+    _, us_var = timed(lambda: clf.model_.predictive_variance(xte))
+    emit("scenarios.variance", us_var, f"n_test={xte.shape[0]};M={m}")
+
+
 def bench_bigk(n: int = 1_000_000, m: int = 1024, d: int = 10, iters: int = 3,
                backend=None) -> None:
     """Out-of-core FALKON (DESIGN.md §10): fit + predict at n rows through
@@ -344,6 +396,9 @@ BENCHES = {
     "multi_rhs": (bench_multi_rhs,
                   lambda backend: bench_multi_rhs(n=600, m=96, k=8, iters=12,
                                                   backend=backend)),
+    "scenarios": (bench_scenarios,
+                  lambda backend: bench_scenarios(n=600, m=96, k=8, iters=10,
+                                                  n_quad=6000, backend=backend)),
     "bigk": (bench_bigk,
              lambda backend: bench_bigk(n=20_000, m=256, iters=3,
                                         backend=backend)),

@@ -5,17 +5,20 @@ first-class slot:
 
   * **Samplers** (Alg. 1/2 + baselines + oracle) — anything implementing
     ``Sampler.sample(key, x, kernel, *, backend=None) -> CenterSet``.
-  * **Estimators** — ``FalkonRegressor`` (Sec. 3 CG), ``NystromRegressor``
-    (Def. 4 direct), ``ExactKrr`` (Eq. 12 oracle), all sklearn-style
-    ``fit(X, y) -> self`` / ``predict`` / ``score`` with multi-output ``y``
-    and warm-start refits on the fused-fit cache.
+  * **Estimators** — ``FalkonRegressor`` (Sec. 3 CG), ``FalkonClassifier``
+    (one-vs-rest on one multi-RHS solve), ``NystromRegressor`` (Def. 4
+    direct), ``ExactKrr`` (Eq. 12 oracle), all sklearn-style
+    ``fit(X, y) -> self`` / ``predict`` / ``score`` with multi-output ``y``,
+    warm-start refits on the fused-fit cache, and GP-style predictive
+    uncertainty (``predict(x, return_std=True)`` / ``predictive_variance``).
   * **Kernel families** — the extensible registry behind ``Kernel``:
     gaussian / laplacian / linear / matern32 / cauchy built in, each running
     on all three backends (jnp / Pallas / shard_map) from one definition
     (``register_kernel_family``; recipe in DESIGN.md §7).
-  * **Model selection** — ``KFoldSweep`` scores a lambda grid by k-fold
-    cross-validation where the k fold targets are columns of ONE multi-RHS
-    FALKON solve per lambda (shared centers, preconditioner and K_nM
+  * **Model selection** — ``KFoldSweep`` scores a lambda grid by *exact*
+    row-exclusion k-fold cross-validation where the k folds are columns of
+    ONE multi-RHS FALKON solve per lambda (per-column row masks in the
+    streamed quadratic op; shared centers, preconditioner and K_nM
     streaming; the lambda grid rides the fused-fit cache).
   * **Serving** — ``KrrServer`` micro-batches prediction traffic over a
     fitted estimator or model; ``AsyncKrrServer`` (+ ``ServeConfig``) adds
@@ -42,7 +45,8 @@ from ..families import KernelFamily, kernel_family_names, register_kernel_family
 from ..serving.async_krr import AsyncKrrServer, ServeConfig
 from ..serving.krr import KrrServer
 from ..stream import ChunkStore, StreamBackend
-from .estimators import ExactKrr, FalkonRegressor, FitConfig, NystromRegressor
+from .estimators import (ExactKrr, FalkonClassifier, FalkonRegressor,
+                         FitConfig, NystromRegressor)
 from .samplers import (
     BlessRSampler,
     BlessSampler,
@@ -63,7 +67,8 @@ __all__ = [
     "ExactRlsSampler", "RecursiveRlsSampler", "SqueakSampler", "TwoPassSampler",
     "ChenYangSampler",
     # estimators (slot 2)
-    "FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr",
+    "FitConfig", "FalkonRegressor", "FalkonClassifier", "NystromRegressor",
+    "ExactKrr",
     # model selection (slot 3)
     "KFoldSweep", "KFoldResult",
     # kernel families

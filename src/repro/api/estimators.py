@@ -27,6 +27,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.falkon import FalkonModel, falkon_fit
 from ..core.gram import BackendLike, Kernel, make_kernel
@@ -86,11 +87,29 @@ class _KrrEstimator:
 
     # -- sklearn surface -----------------------------------------------------
 
-    def predict(self, x: Array) -> Array:
-        """Predictions through the kernel-operator seam ((n,) or (n, k))."""
+    def predict(self, x: Array, *, return_std: bool = False) -> Array | tuple[Array, Array]:
+        """Predictions through the kernel-operator seam ((n,) or (n, k)).
+
+        With ``return_std=True`` returns ``(pred, std)`` where ``std`` is
+        the (n,) square root of the GP-style Nystrom posterior variance
+        (``predictive_variance``) — shared across output columns, since it
+        does not depend on y.
+        """
         if self.model_ is None:
             raise RuntimeError(f"{type(self).__name__} is not fitted; call .fit first")
-        return self.model_.predict(_as_data(x), backend=self.config.backend)
+        pred = self.model_.predict(_as_data(x), backend=self.config.backend)
+        if not return_std:
+            return pred
+        return pred, jnp.sqrt(self.predictive_variance(x))
+
+    def predictive_variance(self, x: Array) -> Array:
+        """GP-style posterior variance ``k(x,x) - k_xM (K_MM + lam n A)^{-1}
+        k_Mx`` per row of ``x`` ((n,), nonnegative), streamed through the
+        backend seam — works at out-of-core n on ``StreamBackend``."""
+        if self.model_ is None:
+            raise RuntimeError(f"{type(self).__name__} is not fitted; call .fit first")
+        return self.model_.predictive_variance(_as_data(x),
+                                               backend=self.config.backend)
 
     def score(self, x: Array, y: Array) -> float:
         """Coefficient of determination R^2 (uniform average over outputs)."""
@@ -129,12 +148,15 @@ class FalkonRegressor(_KrrEstimator):
 
     def fit(self, x: Array, y: Array, *, key: Array | None = None,
             center_set: CenterSet | None = None,
-            callback: Callable[[int, FalkonModel], None] | None = None) -> "FalkonRegressor":
+            callback: Callable[[int, FalkonModel], None] | None = None,
+            row_mask: Array | None = None) -> "FalkonRegressor":
         """Sample centers (unless warm-starting) and solve by preconditioned
         CG. ``center_set`` bypasses the sampler with a precomputed (J, A)
         (e.g. one BLESS ladder shared across estimators); ``callback(i,
         model)`` switches to the host CG loop for per-iteration metrics
-        (single-output only)."""
+        (single-output only). ``row_mask`` (shaped like y) gives each RHS
+        column its own training-row subset — the exact row-exclusion CV
+        mechanism ``KFoldSweep`` rides (see ``falkon_fit``)."""
         x = _as_data(x)
         y = jnp.asarray(y)
         cfg = self.config
@@ -157,8 +179,80 @@ class FalkonRegressor(_KrrEstimator):
         self.model_ = falkon_fit(self.kernel, x, y, self.centers_, cfg.lam,
                                  a_diag=self.a_diag_, iters=cfg.iters,
                                  backend=cfg.backend, callback=callback,
-                                 check_finite=cfg.check_finite)
+                                 check_finite=cfg.check_finite,
+                                 row_mask=row_mask)
         return self
+
+
+class FalkonClassifier(FalkonRegressor):
+    """One-vs-rest classification as ONE multi-RHS FALKON solve.
+
+    The k classes become k RHS columns of a single block-CG on shared
+    centers (squared loss on +-1 one-hot targets — the least-squares SVM
+    reading): the preconditioner, every K_nM stream, and the fused-fit
+    compile are paid once, so k-class classification costs the k-output
+    regression price, not k independent fits. Warm-start refits ride the
+    same fused-fit cache as the regressor.
+
+    ``predict`` returns labels from ``self.classes_`` (argmax of the margin
+    panel); ``decision_function`` exposes the raw (n, k) margins;
+    ``predict_proba`` is a softmax over the margins — a monotone
+    calibration convenience, not a fitted probability model; ``score`` is
+    accuracy. Binary problems keep both columns (k = 2) so every class has
+    a margin.
+    """
+
+    #: sorted unique training labels; set by ``fit``.
+    classes_: "np.ndarray | None" = None
+
+    def fit(self, x: Array, y: Array, *, key: Array | None = None,
+            center_set: CenterSet | None = None,
+            callback: Callable[[int, FalkonModel], None] | None = None,
+            row_mask: Array | None = None) -> "FalkonClassifier":
+        """Encode labels as a +-1 one-hot panel and fit the multi-RHS solve.
+
+        ``y`` is (n,) labels of any hashable dtype (ints, strings, ...);
+        the sorted unique labels become ``self.classes_``. ``callback`` is
+        unsupported (the panel fit has no single-output host loop).
+        """
+        if callback is not None:
+            raise ValueError("FalkonClassifier fits a multi-RHS panel; "
+                             "per-iteration callback is single-output only")
+        labels = np.asarray(y)
+        if labels.ndim != 1:
+            raise ValueError(f"classifier targets must be (n,) labels, "
+                             f"got shape {labels.shape}")
+        classes, inv = np.unique(labels, return_inverse=True)
+        if classes.shape[0] < 2:
+            raise ValueError("need at least 2 classes to classify")
+        self.classes_ = classes
+        onehot = (inv[:, None] == np.arange(classes.shape[0])[None, :])
+        panel = jnp.asarray(np.where(onehot, 1.0, -1.0), jnp.float32)
+        super().fit(x, panel, key=key, center_set=center_set,
+                    row_mask=row_mask)
+        return self
+
+    def decision_function(self, x: Array) -> Array:
+        """Raw one-vs-rest margins (n, k) through the panel predict."""
+        return super().predict(x)
+
+    def predict(self, x: Array, *, return_std: bool = False):
+        """Predicted labels (n,) from ``classes_[argmax(margins)]``; with
+        ``return_std=True`` also the (n,) posterior std of the margins."""
+        margins = self.decision_function(x)
+        labels = self.classes_[np.asarray(jnp.argmax(margins, axis=1))]
+        if not return_std:
+            return labels
+        return labels, jnp.sqrt(self.predictive_variance(x))
+
+    def predict_proba(self, x: Array) -> Array:
+        """Softmax over the margins, (n, k) rows summing to 1 — a monotone
+        score calibration (ranking-faithful), not fitted probabilities."""
+        return jax.nn.softmax(self.decision_function(x), axis=1)
+
+    def score(self, x: Array, y: Array) -> float:
+        """Classification accuracy in [0, 1]."""
+        return float(np.mean(np.asarray(self.predict(x)) == np.asarray(y)))
 
 
 class NystromRegressor(_KrrEstimator):
@@ -197,4 +291,5 @@ class ExactKrr(_KrrEstimator):
         return self
 
 
-__all__ = ["FitConfig", "FalkonRegressor", "NystromRegressor", "ExactKrr"]
+__all__ = ["FitConfig", "FalkonRegressor", "FalkonClassifier",
+           "NystromRegressor", "ExactKrr"]

@@ -7,16 +7,26 @@ preconditioner, the K_nM streaming, and — across the lambda grid — the
 fused-fit jit cache (lam is traced, so every lambda after the first is a
 cache hit with zero retraces).
 
-Fold semantics (deliberate, documented): column f solves the full-data
-Nystrom system with fold f's *targets zeroed* — exactly what a per-fold
-refit of ``falkon_fit`` on the masked targets computes (the parity the
-tests pin down), while keeping the quadratic operator, n, and the
-regularization scale identical across folds so the per-lambda scores are
-directly comparable. This is the "fold-masked RHS" convention: held-out
-rows still contribute rows of K_nM to the operator (like ridge with the
-held-out targets imputed to zero), which is the price of sharing the
-streaming; it preserves the *ranking* over lambda that model selection
-needs. For exact row-exclusion CV, fit each fold separately.
+Fold semantics — exact row-exclusion: column f solves exactly the system a
+separate refit on the fold-f training rows would solve,
+
+    (K_nM^T diag(m_f) K_nM + lam n_f K_MM) alpha_f = K_nM^T (m_f * y),
+
+where m_f masks out fold f's rows and n_f = sum(m_f). The masks ride the
+multi-RHS seam as an (n, folds) ``row_mask`` panel threaded through the
+streamed quadratic op (one extra elementwise multiply per tile on every
+backend — see ``Backend.knm_quadratic``), so held-out rows contribute
+*nothing* to fold f's operator while all folds still share the one K_nM
+stream, the sampled centers, the preconditioner, and the fused-fit jit
+cache. tests/test_scenarios.py pins the per-fold scores to naive
+``falkon_fit(x[train], y[train], ...)`` refits at 1e-6.
+
+Migration note: before PR 9 this class used the "fold-masked RHS"
+approximation (held-out targets zeroed but their K_nM rows kept in the
+operator — full-data n in the regularization). Scores from that era are
+systematically lower-variance than exact CV scores; re-run sweeps rather
+than comparing across the change. The lambda *ranking* rarely moves, but
+absolute MSE values do.
 """
 from __future__ import annotations
 
@@ -79,12 +89,14 @@ class KFoldResult:
 
 @dataclasses.dataclass
 class KFoldSweep:
-    """K-fold lambda selection where folds are columns of one solve.
+    """Exact k-fold lambda selection where folds are columns of one solve.
 
     One sampler call picks the shared centers; then each lambda costs a
     single multi-RHS fused fit (folds = RHS columns on the k-bucketed
-    cache) plus one panel predict — against ``folds * len(lams)`` full
-    fits for the naive grid.
+    cache, each column exactly excluding its held-out rows via the
+    ``row_mask`` panel) plus one panel predict — against
+    ``folds * len(lams)`` full fits for the naive grid, at identical
+    scores (1e-6 parity; see the module docstring).
 
     Attributes:
       kernel: a ``Kernel`` or a registered family name ("gaussian", ...).
@@ -133,8 +145,11 @@ class KFoldSweep:
         key = jax.random.PRNGKey(self.seed) if key is None else key
         k_sample, k_fold = jax.random.split(key)
         fid = fold_ids(k_fold, y.shape[0], self.folds)
-        # column f: train targets with fold f zeroed (see module docstring)
-        y_panel = y[:, None] * (fid[:, None] != jnp.arange(self.folds)[None, :])
+        # column f trains on exactly the rows outside fold f: the mask panel
+        # excludes held-out rows from the quadratic operator AND the targets
+        # (exact row-exclusion CV — see the module docstring).
+        train_mask = (fid[:, None] != jnp.arange(self.folds)[None, :]).astype(y.dtype)
+        y_panel = y[:, None] * train_mask
         est = FalkonRegressor(
             kernel=self.kernel, sigma=self.sigma,
             sampler=self.sampler if self.sampler is not None else BlessSampler(),
@@ -144,7 +159,8 @@ class KFoldSweep:
             est.config = FitConfig(lam=lam, iters=self.iters,
                                    backend=self.backend, seed=self.seed)
             est.fit(x, y_panel, key=k_sample,
-                    center_set=center_set if i == 0 else None)
+                    center_set=center_set if i == 0 else None,
+                    row_mask=train_mask)
             pred = est.predict(x)  # (n, folds): one panel knm_matvec
             sq = (pred - y[:, None]) ** 2
             held_out = fid[:, None] == jnp.arange(self.folds)[None, :]

@@ -156,31 +156,47 @@ class Backend:
         quad = self.masked_quadform(kernel, x_cand, z, z_mask, reg)
         return (kdiag - quad) / lamn
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None) -> KnmQuadraticOp:
         """Build the v -> K_nM^T (K_nM v) operator closure for CG.
 
         The returned op accepts a single fp32 vector (M,) or an (M, k)
         panel of CG iterates — the multi-RHS block-CG form. Panels reuse
         each streamed Gram block for every column, so extra right-hand
         sides cost GEMM flops, not extra kernel evaluations.
+
+        ``mask`` — optional per-column row-exclusion weights, (n,) for a
+        vector op or an (n, k) panel giving column j its own row subset
+        (exact k-fold CV): column j computes ``K_nM^T diag(mask[:, j])
+        K_nM v_j``, one extra elementwise multiply on the streamed
+        (block, k) intermediate. ``mask=None`` is the original program
+        bit-for-bit on every backend.
         """
         raise NotImplementedError
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
         """K_nM^T y — the CG right-hand side(s).
 
         ``y`` is fp32 (n,) -> (M,), or an (n, k) target panel -> (M, k).
+        ``mask`` (optional, shaped like ``y``) computes ``K_nM^T (mask *
+        y)``; since it enters linearly, backends fold it into the targets
+        up front (one elementwise multiply, no new streamed program).
         """
         raise NotImplementedError
 
     def knm_operators(self, kernel: Kernel, x: Array, z: Array,
-                      y: Array) -> tuple[KnmQuadraticOp, Array]:
+                      y: Array, *,
+                      mask: Array | None = None) -> tuple[KnmQuadraticOp, Array]:
         """Return (quadratic op, K_nM^T y) together.
 
         Lets backends that stage data (sharding, device placement) pay the
-        staging cost once; ``y`` may be (n,) or an (n, k) panel.
+        staging cost once; ``y`` may be (n,) or an (n, k) panel, ``mask``
+        an optional per-column row-exclusion panel applied to both halves
+        (see ``knm_quadratic`` / ``knm_t``).
         """
-        return self.knm_quadratic(kernel, x, z), self.knm_t(kernel, x, z, y)
+        return (self.knm_quadratic(kernel, x, z, mask=mask),
+                self.knm_t(kernel, x, z, y, mask=mask))
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
         """K(X, Z) v — the predict / KRR forward contraction.
@@ -241,17 +257,21 @@ class JnpBackend(Backend):
         chol = _chol_with_jitter(kjj)
         return _quadform_from_chol(chol, g)
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
-        """CG quadratic op over the jnp row streamer ((M,) or (M, k))."""
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None) -> KnmQuadraticOp:
+        """CG quadratic op over the jnp row streamer ((M,) or (M, k));
+        optional per-column row ``mask`` (exact-CV panels)."""
         from .falkon import local_knm_quadratic
 
-        return local_knm_quadratic(kernel, x, z, block=self._block())
+        return local_knm_quadratic(kernel, x, z, block=self._block(), mask=mask)
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
-        """K_nM^T y, streamed; (n,) -> (M,) or panel (n, k) -> (M, k)."""
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
+        """K_nM^T y, streamed; (n,) -> (M,) or panel (n, k) -> (M, k).
+        ``mask`` folds into the targets (K_nM^T (mask * y))."""
         from .falkon import local_knm_t
 
-        return local_knm_t(kernel, x, z, y, block=self._block())
+        return local_knm_t(kernel, x, z, y, block=self._block(), mask=mask)
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
         """K(X, Z) v, jitted streaming (serving hot path): one compiled
@@ -349,20 +369,26 @@ class PallasBackend(Backend):
     def _matvec_bn(self, n: int) -> int:
         return self.bn or _pick(PALLAS_MATVEC_BN, n)
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None) -> KnmQuadraticOp:
         """CG quadratic op over the fused Pallas sweep; accepts (M,) or an
-        (M, k) panel (one Gram tile per step serves every column)."""
+        (M, k) panel (one Gram tile per step serves every column). A
+        ``mask`` panel rides the same grid as one extra VMEM multiply on
+        the (bn, k) intermediate (the masked kernel variant)."""
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.make_knm_quadratic_op(
             x, z, sigma, kind=kind, bn=self._matvec_bn(x.shape[0]),
-            interpret=self.interpret, bf16=self.bf16)
+            interpret=self.interpret, bf16=self.bf16, mask=mask)
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
-        """K_nM^T y fused in VMEM; (n,) -> (M,) or panel (n, k) -> (M, k)."""
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
+        """K_nM^T y fused in VMEM; (n,) -> (M,) or panel (n, k) -> (M, k).
+        ``mask`` folds into the targets (K_nM^T (mask * y))."""
         kind, sigma = _kernel_params(kernel)
         return falkon_ops.knm_t(x, z, y, sigma, kind=kind,
                                 bn=self._matvec_bn(x.shape[0]),
-                                interpret=self.interpret, bf16=self.bf16)
+                                interpret=self.interpret, bf16=self.bf16,
+                                mask=mask)
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
         """K(X, Z) v fused in VMEM; (M,) -> (n,) or (M, k) -> (n, k)."""
@@ -440,33 +466,44 @@ class ShardedBackend(Backend):
         quad = _sharded_quadform_fn(mesh, self.axis)(kernel, xs, z, m, chol)
         return quad[: x_cand.shape[0]]
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None) -> KnmQuadraticOp:
         """CG quadratic op with X row-sharded and psum-ed (M,)/(M, k)
-        partials — the collective schedule of a DP gradient all-reduce."""
+        partials — the collective schedule of a DP gradient all-reduce.
+        A ``mask`` panel is row-sharded alongside X."""
         from .distributed import dist_knm_quadratic, shard_rows
 
         mesh = self._mesh()
         xs = shard_rows(mesh, x, self.axis)
-        return dist_knm_quadratic(mesh, kernel, xs, z, x.shape[0], self.axis)
+        ms = None if mask is None else shard_rows(mesh, mask, self.axis)
+        return dist_knm_quadratic(mesh, kernel, xs, z, x.shape[0], self.axis,
+                                  mask=ms)
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
-        """K_nM^T y with X, y row-sharded; (n,) -> (M,), (n, k) -> (M, k)."""
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
+        """K_nM^T y with X, y row-sharded; (n,) -> (M,), (n, k) -> (M, k).
+        ``mask`` folds into the targets before sharding."""
         from .distributed import dist_knm_t, shard_rows
 
+        if mask is not None:
+            y = y * jnp.asarray(mask, y.dtype)
         mesh = self._mesh()
         return dist_knm_t(mesh, kernel, shard_rows(mesh, x, self.axis),
                           shard_rows(mesh, y, self.axis), z, x.shape[0], self.axis)
 
     def knm_operators(self, kernel: Kernel, x: Array, z: Array,
-                      y: Array) -> tuple[KnmQuadraticOp, Array]:
+                      y: Array, *,
+                      mask: Array | None = None) -> tuple[KnmQuadraticOp, Array]:
         """(quadratic op, K_nM^T y), staging X/y on device exactly once."""
         from .distributed import dist_knm_quadratic, dist_knm_t, shard_rows
 
         mesh = self._mesh()
         xs = shard_rows(mesh, x, self.axis)  # device_put once, reuse for both
-        ys = shard_rows(mesh, y, self.axis)
+        ym = y if mask is None else y * jnp.asarray(mask, y.dtype)
+        ys = shard_rows(mesh, ym, self.axis)
+        ms = None if mask is None else shard_rows(mesh, mask, self.axis)
         n = x.shape[0]
-        return (dist_knm_quadratic(mesh, kernel, xs, z, n, self.axis),
+        return (dist_knm_quadratic(mesh, kernel, xs, z, n, self.axis, mask=ms),
                 dist_knm_t(mesh, kernel, xs, ys, z, n, self.axis))
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:
@@ -533,15 +570,16 @@ class GuardedBackend(Backend):
         """Eq. 3 scores with per-dispatch fallback."""
         return self._guard("rls_scores", kernel, x_cand, z, z_mask, reg, lamn)
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array) -> KnmQuadraticOp:
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None) -> KnmQuadraticOp:
         """CG quadratic op; both construction and every call are guarded."""
         try:
-            op = self.primary.knm_quadratic(kernel, x, z)
+            op = self.primary.knm_quadratic(kernel, x, z, mask=mask)
         except Exception as e:  # noqa: BLE001
             health.record_event("backend_fallback", method="knm_quadratic",
                                 primary=self.primary.name,
                                 fallback=self.fallback.name, error=repr(e))
-            return self.fallback.knm_quadratic(kernel, x, z)
+            return self.fallback.knm_quadratic(kernel, x, z, mask=mask)
         fb: list[KnmQuadraticOp | None] = [None]
 
         def guarded_op(v: Array) -> Array:
@@ -552,13 +590,16 @@ class GuardedBackend(Backend):
                                     primary=self.primary.name,
                                     fallback=self.fallback.name, error=repr(e))
                 if fb[0] is None:
-                    fb[0] = self.fallback.knm_quadratic(kernel, x, z)
+                    fb[0] = self.fallback.knm_quadratic(kernel, x, z, mask=mask)
                 return fb[0](v)
 
         return guarded_op
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
         """K_nM^T y with per-dispatch fallback."""
+        if mask is not None:
+            y = y * jnp.asarray(mask, y.dtype)
         return self._guard("knm_t", kernel, x, z, y)
 
     def knm_matvec(self, kernel: Kernel, x: Array, z: Array, v: Array) -> Array:

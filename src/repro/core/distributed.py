@@ -47,12 +47,18 @@ def shard_rows(mesh: Mesh, x: Array, axis: str = "data") -> Array:
 
 
 def dist_knm_quadratic(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array,
-                       n_valid: int, axis: str = "data") -> Callable[[Array], Array]:
+                       n_valid: int, axis: str = "data", *,
+                       mask: Array | None = None) -> Callable[[Array], Array]:
     """Returns v -> K_nM^T (K_nM v) with X row-sharded over ``axis``.
 
     ``v`` may be (M,) or an (M, k) panel (replicated either way): each
     device contracts its local Gram block against every column, and the
     psum-ed partial is (M,) or (M, k) accordingly.
+
+    ``mask`` — optional per-column row-exclusion weights, row-sharded like
+    X ((n,) or an (n, k) panel): column j computes K_nM^T diag(m_j) K_nM
+    v_j, the exact-CV form, as one extra elementwise multiply on the local
+    (rows, k) intermediate before the psum.
     """
     n_pad = x_sharded.shape[0]
 
@@ -63,8 +69,20 @@ def dist_knm_quadratic(mesh: Mesh, kernel: Kernel, x_sharded: Array, z: Array,
             g = kernel.cross(xl, z) * (rows < n_valid)[:, None]
             return jax.lax.psum(g.T @ (g @ vl), axis)
 
-        return shard_map(local, mesh=mesh, in_specs=(P(axis, None), P()), out_specs=P())(
-            x_sharded, v)
+        def local_masked(xl: Array, ml: Array, vl: Array) -> Array:
+            rows = jax.lax.axis_index(axis) * (n_pad // mesh.shape[axis]) + jnp.arange(xl.shape[0])
+            g = kernel.cross(xl, z) * (rows < n_valid)[:, None]
+            t = g @ vl
+            t = t * (ml if t.ndim == ml.ndim else ml[:, None])
+            return jax.lax.psum(g.T @ t, axis)
+
+        if mask is None:
+            return shard_map(local, mesh=mesh, in_specs=(P(axis, None), P()),
+                             out_specs=P())(x_sharded, v)
+        mspec = P(axis, *([None] * (mask.ndim - 1)))
+        return shard_map(local_masked, mesh=mesh,
+                         in_specs=(P(axis, None), mspec, P()),
+                         out_specs=P())(x_sharded, mask, v)
 
     return op
 

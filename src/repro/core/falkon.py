@@ -128,34 +128,60 @@ KnmOp = Callable[[Array], tuple[Array, Array]]
 # v (M,) or (M, k) -> (K_nM^T K_nM v, K_nM^T y)  -- the second returned once
 
 
-def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192) -> Callable[[Array], Array]:
+def local_knm_quadratic(kernel: Kernel, x: Array, z: Array, *, block: int = 8192,
+                        mask: Array | None = None) -> Callable[[Array], Array]:
     """v -> K_nM^T (K_nM v), streaming x in row blocks (pure-jnp reference).
 
     ``v`` may be (M,) or an (M, k) panel: each streamed Gram block is built
     once and contracted against every column, so extra right-hand sides cost
     GEMM flops only — no extra kernel evaluations.
+
+    ``mask`` — optional per-row weights excluding rows from the quadratic
+    form: (n,) applied to every column, or an (n, k) panel giving column j
+    its own row subset (exact row-exclusion CV; DESIGN.md §2.4). Column j
+    then computes ``K_nM^T diag(mask[:, j]) K_nM v_j`` — one extra
+    elementwise multiply on the streamed (block, k) intermediate, applied
+    *between* the two Gram contractions so binary masks count excluded rows
+    exactly once. ``mask=None`` keeps the original program bit-identical.
     """
     n, m = x.shape[0], z.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     nb = xp.shape[0] // block
     valid = (jnp.arange(nb * block) < n).reshape(nb, block)
+    if mask is not None:
+        mk = jnp.pad(jnp.asarray(mask, x.dtype),
+                     ((0, pad),) + ((0, 0),) * (mask.ndim - 1))
+        mk = mk.reshape((nb, block) + mk.shape[1:])
 
     def op(v: Array) -> Array:
         def body(carry, args):
-            xb, mb = args
+            xb, mb, cb = args
             g = kernel.cross(xb, z) * mb[:, None]
-            return carry + g.T @ (g @ v), None
+            t = g @ v
+            if cb is not None:
+                t = t * (cb if t.ndim == cb.ndim else cb[:, None])
+            return carry + g.T @ t, None
 
         out, _ = jax.lax.scan(body, jnp.zeros((m,) + v.shape[1:], v.dtype),
-                              (xp.reshape(nb, block, -1), valid))
+                              (xp.reshape(nb, block, -1), valid,
+                               None if mask is None else mk))
         return out
 
     return op
 
 
-def local_knm_t(kernel: Kernel, x: Array, z: Array, y: Array, *, block: int = 8192) -> Array:
-    """K_nM^T y, streamed; ``y`` (n,) -> (M,), or an (n, k) panel -> (M, k)."""
+def local_knm_t(kernel: Kernel, x: Array, z: Array, y: Array, *, block: int = 8192,
+                mask: Array | None = None) -> Array:
+    """K_nM^T y, streamed; ``y`` (n,) -> (M,), or an (n, k) panel -> (M, k).
+
+    ``mask`` — optional per-row weights, (n,) or (n, k) matching ``y``:
+    computes ``K_nM^T (mask * y)``. Since the mask enters linearly it is
+    folded into the targets up front (one elementwise multiply); the
+    streamed program is otherwise unchanged.
+    """
+    if mask is not None:
+        y = y * jnp.asarray(mask, y.dtype)
     n, m = x.shape[0], z.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
@@ -274,27 +300,42 @@ def _k_bucket(k: int) -> int:
 
 
 def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
-                    row_mask: Array, block: int):
+                    row_mask: Array, block: int,
+                    col_mask: Array | None = None):
     """(quadratic op, K_nM^T y) over bucket-padded rows with a traced
     validity mask — same math as local_knm_quadratic / local_knm_t, but the
     mask is a tracer so one compiled solve serves every n in the bucket.
     ``yp`` is (n_pad,) for a single-output fit or an (n_pad, kb) panel for
     multi-RHS; the quadratic op consumes matching (M,) / (M, kb) iterates.
     (True vector shapes are kept for kb absent — an (n, 1) panel lowers to
-    a markedly slower CPU program than the equivalent matvec.)"""
+    a markedly slower CPU program than the equivalent matvec.)
+
+    ``col_mask`` — optional per-column row-exclusion weights shaped like
+    ``yp``: column j of the quadratic form sees only its masked rows (exact
+    k-fold CV), applied as one extra elementwise multiply on the streamed
+    (block, kb) intermediate. Padding rows must already be zeroed by the
+    caller (falkon_fit pads with zeros). When None, the program is the
+    pre-mask one bit-for-bit — a different pytree structure, so masked and
+    unmasked fits compile to separate cache entries and the unmasked hot
+    path keeps its exact pre-CV executable."""
     m = z.shape[0]
     nb = xp.shape[0] // block
     xb = xp.reshape(nb, block, xp.shape[1])
     mb = row_mask.reshape(nb, block).astype(xp.dtype)
+    cmb = (None if col_mask is None
+           else col_mask.reshape((nb, block) + yp.shape[1:]))
 
     def quad(v: Array) -> Array:
         def body(carry, args):
-            xblk, mblk = args
+            xblk, mblk, cblk = args
             g = kernel.cross(xblk, z) * mblk[:, None]
-            return carry + g.T @ (g @ v), None
+            t = g @ v
+            if cblk is not None:
+                t = t * cblk
+            return carry + g.T @ t, None
 
         out, _ = jax.lax.scan(body, jnp.zeros((m,) + v.shape[1:], v.dtype),
-                              (xb, mb))
+                              (xb, mb, cmb))
         return out
 
     def body_t(carry, args):
@@ -302,6 +343,8 @@ def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
         return carry + kernel.cross(xblk, z).T @ yblk, None
 
     ym = yp * (row_mask if yp.ndim == 1 else row_mask[:, None])
+    if col_mask is not None:
+        ym = ym * col_mask
     kty, _ = jax.lax.scan(body_t, jnp.zeros((m,) + yp.shape[1:], xp.dtype),
                           (xb, ym.reshape((nb, block) + yp.shape[1:])))
     return quad, kty
@@ -311,24 +354,38 @@ def _masked_knm_ops(kernel: Kernel, xp: Array, z: Array, yp: Array,
          donate_argnames=("yp",))
 def _fused_falkon_solve(kernel: Kernel, xp: Array, yp: Array, centers: Array,
                         a_diag: Array, lam: Array, n: Array, *, iters: int,
-                        backend, block: int) -> tuple[Array, Array]:
+                        backend, block: int,
+                        col_mask: Array | None = None) -> tuple[Array, Array]:
     """Preconditioner + multi-RHS CG + alpha recovery as one compiled program.
 
     ``yp`` is the bucket-padded target: (n_pad,) for single-output, or an
     (n_pad, kb) panel for multi-RHS; alpha comes back with matching shape
     and the caller slices the real columns out. Also returns the CG
     residual trajectory for the §9 health diagnostics.
+
+    ``col_mask`` (optional, shaped like ``yp``, zero-padded) gives every
+    column its own row subset: column j solves
+    ``(K_nM^T diag(m_j) K_nM + lam n_j K_MM) alpha_j = K_nM^T (m_j * y_j)``
+    with n_j = sum(m_j) — the per-fold normal equations of exact
+    row-exclusion CV. The preconditioner keeps the *global* n: B enters CG
+    only as a symmetric congruence, and CG iterates are exactly invariant
+    under the (c^2 A, c b) rescaling that a per-column 1/sqrt(n_j) would
+    introduce, so the shared factorization changes nothing (DESIGN.md §2.4).
     """
     global _FUSED_FIT_TRACES
     _FUSED_FIT_TRACES += 1
     row_mask = jnp.arange(xp.shape[0]) < n
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
     kmm = backend.gram_block(kernel, centers, centers)
-    quad, kty = _masked_knm_ops(kernel, xp, centers, yp, row_mask, block)
+    quad, kty = _masked_knm_ops(kernel, xp, centers, yp, row_mask, block,
+                                col_mask)
+    # Per-column effective row count for the lam * n_j * K_MM term; scalar n
+    # (the original program) when no mask is given.
+    n_eff = n if col_mask is None else jnp.sum(col_mask, axis=0)
 
     def matvec(v: Array) -> Array:
         u = prec.apply(v)
-        w = quad(u) + lam * n * (kmm @ u)
+        w = quad(u) + lam * n_eff * (kmm @ u)
         return prec.apply_t(w)
 
     beta, resid = cg(matvec, prec.apply_t(kty), iters, trajectory=True)
@@ -353,6 +410,44 @@ class FalkonModel:
     #: converged/stalled/diverged classification); None for models built
     #: by the direct solvers or hand-assembled.
     diagnostics: "health.SolveDiagnostics | None" = None
+    #: fit-time regularization / row count / center weights, recorded by the
+    #: solvers so ``predictive_variance`` can rebuild the posterior operator
+    #: (K_MM + lam n A); None on hand-assembled models (variance raises).
+    lam: float | None = None
+    n_train: int | None = None
+    a_diag: Array | None = None
+
+    def predictive_variance(self, x: Array, *, backend: BackendLike = None) -> Array:
+        """GP-style Nystrom posterior variance per row of ``x``.
+
+        Computes ``k(x, x) - k_xM (K_MM + lam n A)^{-1} k_Mx`` — the
+        predictive variance of the degenerate-GP reading of Nystrom-KRR
+        (weights A from the sampler; A = I for uniform/exact fits). This is
+        exactly ``lam * n`` times the ridge leverage score of x against the
+        centers, so it rides the seam's fused ``rls_scores`` path: the
+        Pallas backend takes the one-kernel RLS program, ``StreamBackend``
+        streams x in host chunks with the (M, M) factorization hoisted out
+        of the loop — out-of-core n works unchanged.
+
+        Returns (n,) nonnegative variances (clipped at 0 against fp32
+        cancellation; multi-output models share one variance — it does not
+        depend on y). Raises ``ValueError`` on models missing the fit
+        metadata (lam / n_train), e.g. hand-assembled ones.
+        """
+        if self.lam is None or self.n_train is None:
+            raise ValueError(
+                "predictive_variance needs fit metadata (lam, n_train); this "
+                "model was built without it — refit via falkon_fit / "
+                "nystrom_krr / exact_krr")
+        spec = backend if backend is not None else self.backend
+        be = resolve_backend(spec, n=x.shape[0])
+        m = self.centers.shape[0]
+        a = (jnp.ones((m,), jnp.float32) if self.a_diag is None
+             else self.a_diag.astype(jnp.float32))
+        lam_n = jnp.asarray(self.lam * self.n_train, jnp.float32)
+        scores = be.rls_scores(self.kernel, x, self.centers,
+                               jnp.ones((m,), bool), lam_n * a, lam_n)
+        return jnp.maximum(lam_n * scores, 0.0)
 
     def predict(self, x: Array, *, backend: BackendLike = None) -> Array:
         """K(x, centers) alpha through the kernel-operator seam.
@@ -394,6 +489,7 @@ def falkon_fit(
     callback: Callable[[int, FalkonModel], None] | None = None,
     fused: bool | None = None,
     check_finite: bool = False,
+    row_mask: Array | None = None,
 ) -> FalkonModel:
     """Fit FALKON (uniform A=I) or FALKON-BLESS (A from Alg. 1/2).
 
@@ -420,6 +516,16 @@ def falkon_fit(
     NaN alpha. It defaults off because the check is one blocking device
     round-trip per fit — real cost in the hot sweep paths (fig3 warm-start
     refits, KFoldSweep grids) that dispatch many fits back to back.
+
+    ``row_mask`` — optional per-column row-exclusion weights shaped like
+    ``y`` ((n,) or (n, k)): column j is fit on only its masked rows, i.e.
+    solves ``(K_nM^T diag(m_j) K_nM + lam n_j K_MM) alpha_j =
+    K_nM^T (m_j y_j)`` with n_j = sum(m_j). This is the exact k-fold CV
+    mechanism (every fold = one masked RHS column of a single multi-RHS
+    solve); the shared preconditioner keeps the global n, which is exact —
+    CG iterates are invariant under the per-column rescaling (see
+    ``_fused_falkon_solve``). ``row_mask=None`` keeps the pre-mask program
+    (and its jit cache entries) bit-for-bit.
     """
     n = x.shape[0]
     m = centers.shape[0]
@@ -428,6 +534,11 @@ def falkon_fit(
     if not single and callback is not None:
         raise ValueError("per-iteration callback is single-output only; "
                          "fit columns separately to trace them")
+    if row_mask is not None:
+        row_mask = jnp.asarray(row_mask, x.dtype)
+        if row_mask.shape != y.shape:
+            raise ValueError(f"row_mask shape {row_mask.shape} must match "
+                             f"y shape {y.shape}")
     a_diag = jnp.ones((m,), x.dtype) if a_diag is None else a_diag
     if fused is None:
         fused = backend.jit_safe and callback is None
@@ -448,24 +559,33 @@ def falkon_fit(
             yp = jnp.pad(y, ((0, pad),) if single else ((0, pad), (0, col_pad)))
         else:
             yp = y + jnp.zeros((), y.dtype)
+        col_mask = None
+        if row_mask is not None:
+            # Zero-pad like yp: padded rows drop out of the quadratic form
+            # and padded columns get n_j = 0 (frozen by the CG mask anyway).
+            col_mask = jnp.pad(
+                row_mask,
+                ((0, pad),) if single else ((0, pad), (0, col_pad)))
         alpha, resid = _fused_falkon_solve(
             kernel, jnp.pad(x, ((0, pad), (0, 0))), yp, centers, a_diag,
             jnp.asarray(lam, jnp.float32), jnp.asarray(n, jnp.int32),
-            iters=iters, backend=backend, block=block)
+            iters=iters, backend=backend, block=block, col_mask=col_mask)
         alpha = alpha if single else alpha[:, : y.shape[1]]
         resid = resid if single else resid[:, : y.shape[1]]
         if check_finite:
             health.check_finite(alpha, "falkon_fit alpha (fused)")
         return FalkonModel(centers=centers, alpha=alpha, kernel=kernel,
                            backend=backend,
-                           diagnostics=health.SolveDiagnostics(resid))
+                           diagnostics=health.SolveDiagnostics(resid),
+                           lam=float(lam), n_train=n, a_diag=a_diag)
     prec = make_preconditioner(kernel, centers, a_diag, lam, n)
     kmm = backend.gram_block(kernel, centers, centers)
-    quad, kty = backend.knm_operators(kernel, x, centers, y)
+    quad, kty = backend.knm_operators(kernel, x, centers, y, mask=row_mask)
+    n_eff = n if row_mask is None else jnp.sum(row_mask, axis=0)
 
     def matvec(v: Array) -> Array:
         u = prec.apply(v)
-        w = quad(u) + lam * n * (kmm @ u)
+        w = quad(u) + lam * n_eff * (kmm @ u)
         return prec.apply_t(w)
 
     b = prec.apply_t(kty)
@@ -480,7 +600,8 @@ def falkon_fit(
         health.check_finite(alpha, "falkon_fit alpha")
     return FalkonModel(centers=centers, alpha=alpha, kernel=kernel,
                        backend=backend,
-                       diagnostics=health.SolveDiagnostics(resid))
+                       diagnostics=health.SolveDiagnostics(resid),
+                       lam=float(lam), n_train=n, a_diag=a_diag)
 
 
 def falkon_bless_fit(key: Array, kernel: Kernel, x: Array, y: Array, lam_bless: float,

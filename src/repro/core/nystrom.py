@@ -45,7 +45,8 @@ def nystrom_krr(kernel: Kernel, x: Array, y: Array, centers: Array, lam: float,
     chol, _ = health.safe_cholesky(h, what="Nystrom-KRR H = KnM^T KnM + lam n K_MM")
     alpha = jax.scipy.linalg.cho_solve((chol, True), knm.T @ y)
     health.check_finite(alpha, "nystrom_krr alpha")
-    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=be)
+    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel, backend=be,
+                       lam=float(lam), n_train=n)
 
 
 def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float,
@@ -62,4 +63,5 @@ def exact_krr(kernel: Kernel, x: Array, y: Array, lam: float,
                                    what="exact-KRR K + lam n I")
     c = jax.scipy.linalg.cho_solve((chol, True), y)
     health.check_finite(c, "exact_krr alpha")
-    return FalkonModel(centers=x, alpha=c, kernel=kernel, backend=be)
+    return FalkonModel(centers=x, alpha=c, kernel=kernel, backend=be,
+                       lam=float(lam), n_train=n)

@@ -112,6 +112,56 @@ def falkon_matvec_pallas(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: fl
     )(x, z, v)
 
 
+def _masked_matvec_kernel(x_ref, z_ref, v_ref, m_ref, o_ref, *, kind: str,
+                          inv_scale: float, bn: int, n_valid: int, bf16: bool):
+    """The quadratic matvec with a per-column row-mask panel (exact-CV CG):
+    column j accumulates G^T diag(m_j) G v_j. Identical tile schedule to
+    ``_matvec_kernel`` plus one VPU multiply on the (bn, kp) intermediate —
+    the mask tile rides the same HBM->VMEM stream as X."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    z = z_ref[...].astype(jnp.float32)  # (M, d)
+    g = _gram_tile(x, z, kind=kind, inv_scale=inv_scale, bf16=bf16)
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    g = jnp.where(rows < n_valid, g, 0.0)
+    t = g @ v_ref[...].astype(jnp.float32)  # (bn, kp)
+    t = t * m_ref[...].astype(jnp.float32)  # per-column row exclusion
+    o_ref[...] += _panel_t_g(g, t)
+
+
+@partial(jax.jit, static_argnames=("kind", "bn", "n_valid", "interpret",
+                                   "inv_scale", "bf16"))
+def falkon_matvec_masked_pallas(x: jax.Array, z: jax.Array, v: jax.Array,
+                                mask: jax.Array, inv_scale: float, *,
+                                kind: str = "gaussian", bn: int = 512,
+                                n_valid: int, interpret: bool = True,
+                                bf16: bool = False) -> jax.Array:
+    """K_nM^T diag(m_j) K_nM V per column, pre-padded; mask (n, kp)."""
+    n, d = x.shape
+    m, kp = z.shape[0], v.shape[1]
+    assert n % bn == 0 and d % 128 == 0 and m % 128 == 0 and kp % 128 == 0
+    assert mask.shape == (n, kp)
+    return pl.pallas_call(
+        partial(_masked_matvec_kernel, kind=kind, inv_scale=float(inv_scale),
+                bn=bn, n_valid=n_valid, bf16=bf16),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, kp), lambda i: (0, 0)),
+            pl.BlockSpec((bn, kp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kp), jnp.float32),
+        interpret=interpret,
+    )(x, z, v, mask)
+
+
 def _knm_t_kernel(x_ref, z_ref, y_ref, o_ref, *, kind: str, inv_scale: float,
                   bn: int, n_valid: int, bf16: bool):
     """R += k(X_tile, Z)^T Y_tile — the CG right-hand sides K_nM^T Y, fused."""

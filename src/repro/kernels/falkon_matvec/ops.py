@@ -13,11 +13,14 @@ operands, fp32 accumulation — see falkon_matvec.py).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from ...families import get_family
 from ..common import default_interpret, pad_dim, round_up
-from .falkon_matvec import falkon_matvec_pallas, knm_matvec_pallas, knm_t_pallas
-from .ref import falkon_matvec_ref, knm_matvec_ref, knm_t_ref
+from .falkon_matvec import (falkon_matvec_masked_pallas, falkon_matvec_pallas,
+                            knm_matvec_pallas, knm_t_pallas)
+from .ref import (falkon_matvec_masked_ref, falkon_matvec_ref, knm_matvec_ref,
+                  knm_t_ref)
 
 
 def _inv_scale(kind: str, sigma: float) -> float:
@@ -40,9 +43,16 @@ def _unpanel(out: jax.Array, k_or_none: int | None) -> jax.Array:
 
 def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, *,
                   kind: str = "gaussian", bn: int = 512,
-                  interpret: bool | None = None, bf16: bool = False) -> jax.Array:
+                  interpret: bool | None = None, bf16: bool = False,
+                  mask: jax.Array | None = None) -> jax.Array:
     """K_nM^T (K_nM v) -> (M,) or (M, k) fp32. Arbitrary shapes, padded
-    internally; a panel ``v`` is the multi-RHS block-CG iterate."""
+    internally; a panel ``v`` is the multi-RHS block-CG iterate.
+
+    ``mask`` — optional per-column row-exclusion weights shaped like a
+    length-n slice of ``v``'s panel-ness ((n,) with a vector, (n, k) with a
+    panel): column j computes K_nM^T diag(m_j) K_nM v_j via the masked
+    kernel variant (one extra VPU multiply per tile). ``mask=None``
+    dispatches the original kernel unchanged."""
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -52,27 +62,47 @@ def falkon_matvec(x: jax.Array, z: jax.Array, v: jax.Array, sigma: float = 1.0, 
     # padded Z rows are the all-zeros point; its kernel values are nonzero but
     # v is zero-padded so they never enter t, and we slice r back to (m,).
     vp, squeeze = _as_panel(pad_dim(v, 0, round_up(m, 128)))
-    out = falkon_matvec_pallas(xp, zp, vp, float(_inv_scale(kind, sigma)), kind=kind,
-                               bn=bn, n_valid=n, interpret=interpret, bf16=bf16)
+    if mask is None:
+        out = falkon_matvec_pallas(xp, zp, vp, float(_inv_scale(kind, sigma)),
+                                   kind=kind, bn=bn, n_valid=n,
+                                   interpret=interpret, bf16=bf16)
+        return _unpanel(out[:m], None if squeeze else v.shape[1])
+    # zero-padded mask rows/columns: padded rows are killed by n_valid anyway
+    # and padded v columns are zero, so the pad value never reaches the output.
+    if mask.ndim == 1 and v.ndim == 2:
+        mask = jnp.broadcast_to(mask[:, None], (n, v.shape[1]))
+    mp, _ = _as_panel(pad_dim(mask.astype(x.dtype), 0, round_up(n, bn)))
+    out = falkon_matvec_masked_pallas(xp, zp, vp, mp,
+                                      float(_inv_scale(kind, sigma)), kind=kind,
+                                      bn=bn, n_valid=n, interpret=interpret,
+                                      bf16=bf16)
     return _unpanel(out[:m], None if squeeze else v.shape[1])
 
 
 def make_knm_quadratic_op(x: jax.Array, z: jax.Array, sigma: float = 1.0, *,
                           kind: str = "gaussian", bn: int = 512,
-                          interpret: bool | None = None, bf16: bool = False):
-    """Close over (x, z) -> the CG quadratic operator ``falkon_matvec``."""
+                          interpret: bool | None = None, bf16: bool = False,
+                          mask: jax.Array | None = None):
+    """Close over (x, z) -> the CG quadratic operator ``falkon_matvec``;
+    an optional ``mask`` panel selects the masked kernel (exact-CV CG)."""
     def op(v: jax.Array) -> jax.Array:
         return falkon_matvec(x, z, v, sigma, kind=kind, bn=bn, interpret=interpret,
-                             bf16=bf16)
+                             bf16=bf16, mask=mask)
 
     return op
 
 
 def knm_t(x: jax.Array, z: jax.Array, y: jax.Array, sigma: float = 1.0, *,
           kind: str = "gaussian", bn: int = 512,
-          interpret: bool | None = None, bf16: bool = False) -> jax.Array:
+          interpret: bool | None = None, bf16: bool = False,
+          mask: jax.Array | None = None) -> jax.Array:
     """K_nM^T y -> (M,) or (M, k) fp32. Arbitrary shapes, padded internally;
-    a panel ``y`` yields every CG right-hand side from one X sweep."""
+    a panel ``y`` yields every CG right-hand side from one X sweep. A
+    ``mask`` shaped like ``y`` folds into the targets (K_nM^T (mask * y))
+    before the sweep — the mask enters linearly, so no kernel variant is
+    needed."""
+    if mask is not None:
+        y = y * mask.astype(y.dtype)
     n, d = x.shape
     m = z.shape[0]
     interpret = default_interpret() if interpret is None else interpret
@@ -105,5 +135,6 @@ def knm_matvec(x: jax.Array, z: jax.Array, alpha: jax.Array, sigma: float = 1.0,
 
 
 falkon_matvec_reference = falkon_matvec_ref
+falkon_matvec_masked_reference = falkon_matvec_masked_ref
 knm_t_reference = knm_t_ref
 knm_matvec_reference = knm_matvec_ref

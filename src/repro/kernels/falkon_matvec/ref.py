@@ -15,6 +15,16 @@ def falkon_matvec_ref(x: jax.Array, z: jax.Array, v: jax.Array, inv_scale: float
     return g.T @ (g @ v.astype(jnp.float32))
 
 
+def falkon_matvec_masked_ref(x: jax.Array, z: jax.Array, v: jax.Array,
+                             mask: jax.Array, inv_scale: float,
+                             *, kind: str = "gaussian") -> jax.Array:
+    """Column j of the masked quadratic matvec: G^T diag(mask[:, j]) G v_j.
+    ``mask`` is (n,) for a vector v or (n, k) for a panel."""
+    g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)
+    t = g @ v.astype(jnp.float32)
+    return g.T @ (t * mask.astype(jnp.float32))
+
+
 def knm_t_ref(x: jax.Array, z: jax.Array, y: jax.Array, inv_scale: float,
               *, kind: str = "gaussian") -> jax.Array:
     g = gram_ref(x, z, inv_scale, kind=kind).astype(jnp.float32)

@@ -36,6 +36,7 @@ from typing import Callable, ClassVar
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.backend import Backend, JnpBackend, _quadform_from_chol
 from ..core.gram import Kernel
@@ -70,6 +71,13 @@ def _quad_chunk(kernel, xb, z, v, acc, *, inner):
     return acc + g.T @ (g @ v)
 
 
+def _quad_chunk_masked(kernel, xb, z, v, mb, acc, *, inner):
+    g = inner.gram_block(kernel, xb, z)
+    t = g @ v
+    t = t * (mb if t.ndim == mb.ndim else mb[:, None])
+    return acc + g.T @ t
+
+
 def _knmt_chunk(kernel, xb, z, yb, acc, *, inner):
     return acc + inner.gram_block(kernel, xb, z).T @ yb
 
@@ -90,6 +98,7 @@ def _rls_chunk(kernel, xb, z, maskf, chol, lamn, *, inner):
 
 _jit = partial(jax.jit, static_argnames=("inner",))
 _quad_chunk_jit = _jit(_quad_chunk)
+_quad_chunk_masked_jit = _jit(_quad_chunk_masked)
 _knmt_chunk_jit = _jit(_knmt_chunk)
 _matvec_chunk_jit = _jit(_matvec_chunk)
 _quadform_chunk_jit = _jit(_quadform_chunk)
@@ -178,25 +187,48 @@ class StreamBackend(Backend):
             outs.append(step(kernel, xb, z, maskf, chol, lamn, inner=self.inner))
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
-    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array):
+    def knm_quadratic(self, kernel: Kernel, x: Array, z: Array, *,
+                      mask: Array | None = None):
         """CG quadratic op v -> K_nM^T (K_nM v): every call re-streams X
         from host with double-buffered copies, folding each (chunk, M) tile
-        into the (M,)/(M, k) accumulator in chunk order."""
+        into the (M,)/(M, k) accumulator in chunk order. An optional
+        ``mask`` ((n,) or (n, k) per-column row exclusion — exact CV) rides
+        the same chunk iterator as the aux stream, so masked ops stay
+        out-of-core: only (chunk, k) mask slices ever reach the device."""
         m = z.shape[0]
-        step = self._pick(_quad_chunk, _quad_chunk_jit)
+        if mask is None:
+            step = self._pick(_quad_chunk, _quad_chunk_jit)
 
-        def op(v: Array) -> Array:
+            def op(v: Array) -> Array:
+                acc = jnp.zeros((m,) + v.shape[1:], jnp.float32)
+                for xb, _ in device_chunks(x, chunk=self.chunk):
+                    self._note_tile(xb.shape[0], m)
+                    acc = step(kernel, xb, z, v, acc, inner=self.inner)
+                return acc
+
+            return op
+
+        mstep = self._pick(_quad_chunk_masked, _quad_chunk_masked_jit)
+
+        def masked_op(v: Array) -> Array:
             acc = jnp.zeros((m,) + v.shape[1:], jnp.float32)
-            for xb, _ in device_chunks(x, chunk=self.chunk):
+            for xb, mb in device_chunks(x, aux=mask, chunk=self.chunk):
                 self._note_tile(xb.shape[0], m)
-                acc = step(kernel, xb, z, v, acc, inner=self.inner)
+                acc = mstep(kernel, xb, z, v, mb, acc, inner=self.inner)
             return acc
 
-        return op
+        return masked_op
 
-    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array) -> Array:
+    def knm_t(self, kernel: Kernel, x: Array, z: Array, y: Array, *,
+              mask: Array | None = None) -> Array:
         """K_nM^T y with y chunked in lockstep with X; (n,) -> (M,) or an
-        (n, k) panel -> (M, k), one tile serving every column."""
+        (n, k) panel -> (M, k), one tile serving every column. ``mask``
+        folds into the targets (K_nM^T (mask * y)) before chunking."""
+        if mask is not None:
+            if isinstance(y, jax.Array):
+                y = y * jnp.asarray(mask, y.dtype)
+            else:  # host-resident targets stay on host (out-of-core n)
+                y = np.asarray(y) * np.asarray(mask)
         m = z.shape[0]
         step = self._pick(_knmt_chunk, _knmt_chunk_jit)
         acc = jnp.zeros((m,) + y.shape[1:], jnp.float32)

@@ -313,6 +313,92 @@ def test_with_inner_is_pure():
     assert dataclasses.asdict(base)  # still a plain frozen dataclass
 
 
+# ---------------------------------------------------------------------------
+# PR 9 scenarios at out-of-core n: masked ops, classifier, variance
+# ---------------------------------------------------------------------------
+
+
+def test_masked_quadratic_streams_mask_as_aux():
+    """The (n, k) mask panel rides the chunk iterator next to X — masked
+    ops agree with the jnp seam and never put the whole mask on device."""
+    n, m, k, chunk = 40_000, 32, 4, 2048
+    x, _ = _xy(n, d=5, seed=19)
+    rng = np.random.default_rng(20)
+    mask = (rng.uniform(size=(n, k)) > 0.25).astype(np.float32)
+    z = jnp.asarray(x[:m])
+    v = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    store = ChunkStore(x, chunk=chunk)
+    sb = StreamBackend()
+    reset_peak_device_bytes()
+    out = sb.knm_quadratic(KERN, store, z, mask=mask)(v)
+    peak = peak_device_bytes()
+    _close(out, JNP.knm_quadratic(KERN, jnp.asarray(x), z,
+                                  mask=jnp.asarray(mask))(v))
+    # working set: 2 x-chunks + 2 mask-chunks + one (chunk, m) tile — the
+    # full (n, k) mask (640 KB) must never be device-resident at once
+    working_set = 4 * (2 * chunk * 5 + 2 * chunk * k + chunk * m)
+    assert peak <= working_set + 4096
+    assert peak < 4 * n * k  # < one full mask panel
+
+
+def test_classifier_end_to_end_out_of_core():
+    """FalkonClassifier on a host-resident ChunkStore: the panel fit, the
+    margin predict, and the argmax labels all stream — peak device bytes
+    stay in the working-set class, far below any (n, M) array."""
+    from repro.api import FalkonClassifier, FitConfig, UniformSampler
+
+    n, d, chunk = 30_000, 5, 2048
+    rng = np.random.default_rng(23)
+    labels = np.arange(n) % 3
+    means = rng.standard_normal((3, d)).astype(np.float32) * 3.0
+    x = means[labels] + rng.standard_normal((n, d)).astype(np.float32)
+    store = ChunkStore(x, chunk=chunk)
+    clf = FalkonClassifier(
+        kernel=KERN, sampler=UniformSampler(m=64),
+        config=FitConfig(lam=1e-4, iters=8, backend=StreamBackend()))
+    reset_peak_device_bytes()
+    clf.fit(store, labels)
+    pred = clf.predict(store)
+    peak = peak_device_bytes()
+    assert pred.shape == (n,)
+    acc = float(np.mean(pred == labels))
+    assert acc > 0.9, acc
+    # the fit + predict never materialize K_nM (4 n M = 7.7 MB here); the
+    # O(n) device arrays are the (n, 3) margin panel and the fit targets
+    assert peak < 4 * n * 64 / 2
+    proba = clf.predict_proba(store)
+    assert proba.shape == (n, 3)
+    np.testing.assert_allclose(np.asarray(jnp.sum(proba, axis=1)), 1.0,
+                               rtol=1e-5)
+
+
+def test_predictive_variance_out_of_core():
+    """predictive_variance on a ChunkStore streams the fused RLS scorer:
+    parity with the jnp seam, working-set peak memory."""
+    from repro.api import FalkonRegressor, FitConfig, UniformSampler
+
+    n, d, chunk = 30_000, 5, 2048
+    x, y = _xy(n, d=d, seed=29)
+    store = ChunkStore(x, chunk=chunk)
+    est = FalkonRegressor(
+        kernel=KERN, sampler=UniformSampler(m=64),
+        config=FitConfig(lam=1e-4, iters=8, backend=StreamBackend()))
+    est.fit(store, jnp.asarray(y))
+    reset_peak_device_bytes()
+    var = est.predictive_variance(store)
+    peak = peak_device_bytes()
+    assert var.shape == (n,) and bool(jnp.all(var >= 0.0))
+    ref = est.model_.predictive_variance(jnp.asarray(x[:512]), backend="jnp")
+    _close(var[:512], ref, tol=1e-4)
+    # the scorer holds 2 x-chunks + one (chunk, M) tile + the (n,) output
+    working_set = 4 * (2 * chunk * d + chunk * 64 + n)
+    assert peak <= working_set + 4096
+    # return_std composes on the store too
+    pred, std = est.predict(store, return_std=True)
+    assert pred.shape == (n,) and std.shape == (n,)
+    _close(std, jnp.sqrt(var), tol=1e-6)
+
+
 def test_estimator_front_door_accepts_store():
     from repro.api import ChunkStore as ApiChunkStore
     from repro.api import FalkonRegressor, FitConfig, UniformSampler

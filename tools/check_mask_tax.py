@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Gate the mask-panel tax: scenarios.quad_masked <= --max-ratio x
+scenarios.quad_unmasked, read from one benchmarks/run.py --json file.
+
+Both rows are timed back-to-back in the same process on the same data
+(see ``bench_scenarios``), so the ratio cancels runner speed — unlike the
+cross-run ratios ``check_bench.py`` gates. This is the PR 9 acceptance
+bound on the exact-CV mechanism: the per-column row mask must cost one
+elementwise multiply per tile, not a second pass over the kernel
+evaluations.
+
+Usage (CI, after the bench-smoke run):
+
+    python tools/check_mask_tax.py bench_smoke.json --max-ratio 1.15
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+UNMASKED = "scenarios.quad_unmasked"
+MASKED = "scenarios.quad_masked"
+
+
+def check(path: str, max_ratio: float) -> int:
+    """Return the process exit code (0 = within the gate)."""
+    with open(path) as f:
+        rows = {r["name"]: float(r["us_per_call"]) for r in json.load(f)}
+    missing = [n for n in (UNMASKED, MASKED) if n not in rows]
+    if missing:
+        print(f"FAIL: {path} has no {' / '.join(missing)} row(s); "
+              "was the scenarios bench in the --only list?")
+        return 1
+    ratio = rows[MASKED] / rows[UNMASKED]
+    print(f"{MASKED} / {UNMASKED} = {rows[MASKED]:.1f} / "
+          f"{rows[UNMASKED]:.1f} us = {ratio:.3f} (max {max_ratio})")
+    if ratio > max_ratio:
+        print(f"FAIL: mask-panel tax {ratio:.3f} > {max_ratio}")
+        return 1
+    print("OK: mask multiply within the per-tile budget")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("current", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--max-ratio", type=float, default=1.15)
+    args = ap.parse_args(argv)
+    return check(args.current, args.max_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

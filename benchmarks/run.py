@@ -11,6 +11,8 @@
                               (exact CV), classifier fit, variance scorer
   bench_bigk                  out-of-core: million-row FALKON through the
                               stream backend, peak device bytes recorded
+  bench_online                durable online FALKON: append + warm refit
+                              vs cold fit (the >=5x CI speedup gate)
   bench_lm_steps              framework: smoke-scale train/decode step times
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), one per measurement.
@@ -347,6 +349,35 @@ def bench_bigk(n: int = 1_000_000, m: int = 1024, d: int = 10, iters: int = 3,
          f"n={n};M={m};peakMB={peak_device_bytes() / 1e6:.1f};knmMB={knm_mb:.0f}")
 
 
+def bench_online(n: int = 50_000, m: int = 384, iters: int = 10,
+                 backend=None) -> None:
+    """Durable online FALKON: absorb a fresh batch into the streamed
+    normal-equation accumulators, then warm-refit — O(batch) + O(M^2·iters),
+    n-independent — vs a cold from-scratch fit on the same rows. The warm
+    row's speedup is the >=5x gate tools/check_bench.py enforces in CI."""
+    from repro.api import OnlineFalkon
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, 10)).astype(np.float32)
+    y = np.sin(2.0 * x[:, 0]).astype(np.float32)
+    kern = make_kernel("gaussian", sigma=2.0)
+    centers = jnp.asarray(x[:m])
+    batch = n // 10
+    of = OnlineFalkon(kern, centers, 1e-6, x=x[: n - batch], y=y[: n - batch],
+                      iters=iters, backend=backend or "stream")
+    # return the accumulator so timed() blocks on the absorbed batch
+    _, us_app = timed(lambda: (of.append(x[n - batch:], y[n - batch:]),
+                               of._h)[1])
+    _, us_warm = timed(lambda: of.refit())
+    _, us_cold = timed(lambda: falkon_fit(
+        kern, jnp.asarray(x), jnp.asarray(y), centers, 1e-6, iters=iters,
+        backend=backend or "stream"))
+    emit("online.append", us_app, f"n={n};M={m};batch={batch}")
+    emit("online.cold_refit", us_cold, f"n={n};M={m};iters={iters}")
+    emit("online.warm_refit", us_warm,
+         f"n={n};M={m};iters={iters};speedup={us_cold / us_warm:.1f}x")
+
+
 def bench_lm_steps(backend=None) -> None:
     """Smoke-scale per-arch step timing (framework sanity, not paper)."""
     from repro.configs import get_config, list_archs, smoke
@@ -402,6 +433,9 @@ BENCHES = {
     "bigk": (bench_bigk,
              lambda backend: bench_bigk(n=20_000, m=256, iters=3,
                                         backend=backend)),
+    "online": (bench_online,
+               lambda backend: bench_online(n=20_000, m=256, iters=8,
+                                            backend=backend)),
     "lm": (bench_lm_steps, bench_lm_steps),
 }
 

@@ -23,9 +23,16 @@ first-class slot:
   * **Serving** — ``KrrServer`` micro-batches prediction traffic over a
     fitted estimator or model; ``AsyncKrrServer`` (+ ``ServeConfig``) adds
     the fault-tolerant continuous-batching loop: bounded queue with
-    backpressure, per-request deadlines, wave-level failure isolation, and
-    SLO-triggered degradation to a fallback model (DESIGN.md §9,
-    docs/serving.md).
+    backpressure, per-request deadlines, wave-level failure isolation,
+    SLO-triggered degradation to a fallback model, and probe-fenced
+    zero-downtime ``swap_model`` (DESIGN.md §9/§11, docs/serving.md).
+  * **Durable online FALKON** — ``OnlineFalkon`` absorbs incoming rows into
+    streamed normal-equation accumulators (fenced ingest, warm O(M^2)
+    refits, pluggable background center refresh);
+    ``resumable_streamed_fit`` checkpoints the out-of-core fit at chunk
+    barriers and resumes a killed fit to a bit-identical alpha
+    (``ResumeMismatchError`` refuses incompatible checkpoints) —
+    DESIGN.md §11.
 
     from repro.api import BlessSampler, FalkonRegressor, FitConfig
 
@@ -42,6 +49,7 @@ leak through this namespace).
 from ..core.gram import Kernel, make_kernel
 from ..core.leverage import CenterSet
 from ..families import KernelFamily, kernel_family_names, register_kernel_family
+from ..online import OnlineFalkon, ResumeMismatchError, resumable_streamed_fit
 from ..serving.async_krr import AsyncKrrServer, ServeConfig
 from ..serving.krr import KrrServer
 from ..stream import ChunkStore, StreamBackend
@@ -78,4 +86,6 @@ __all__ = [
     "CenterSet", "KrrServer", "AsyncKrrServer", "ServeConfig",
     # out-of-core streaming (DESIGN.md §10)
     "ChunkStore", "StreamBackend",
+    # durable online FALKON (DESIGN.md §11)
+    "OnlineFalkon", "resumable_streamed_fit", "ResumeMismatchError",
 ]

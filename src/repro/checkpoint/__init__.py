@@ -1,4 +1,5 @@
-from .ckpt import (AsyncCheckpointer, latest_step, restore_checkpoint,
-                   save_checkpoint)
+from .ckpt import (CRASH_STAGES, AsyncCheckpointer, checkpoint_extra,
+                   latest_step, restore_checkpoint, save_checkpoint)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["AsyncCheckpointer", "CRASH_STAGES", "checkpoint_extra",
+           "latest_step", "restore_checkpoint", "save_checkpoint"]

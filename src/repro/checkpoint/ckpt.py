@@ -11,6 +11,13 @@ with whatever sharding the (possibly different-sized) new mesh prescribes —
 that is the elastic-rescale path. On a multi-host pod each process would
 write only its addressable shards (the manifest records per-leaf global
 shapes already); single-process CPU writes everything.
+
+Crash windows are first-class: every filesystem step of ``save_checkpoint``
+hosts a ``ckpt.torn_write`` injection point (``repro.testing.faults``) so
+the chaos suite can kill the write at any stage — in particular inside the
+torn window between the fully-written temp dir and the atomic rename — and
+assert that ``latest_step`` only ever loads a complete checkpoint. The
+stage names, in write order, are ``CRASH_STAGES``.
 """
 from __future__ import annotations
 
@@ -23,7 +30,20 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..testing import faults
+
 _SEP = "/"
+
+#: ``save_checkpoint`` crash-point stages, in the order they are hit (the
+#: ``leaf`` stage fires once per leaf). ``pre_rename`` is the torn window:
+#: temp dir complete, manifest written, final rename not yet issued.
+CRASH_STAGES = ("post_tmp_dir", "leaf", "pre_rename", "post_rename")
+
+
+def _crash_point(stage: str) -> None:
+    """``ckpt.torn_write`` hook: one dict-emptiness check when quiet."""
+    if faults.active():
+        faults.raise_if("ckpt.torn_write", tag=stage)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -49,6 +69,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
+    _crash_point("post_tmp_dir")
     flat = _flatten(tree)
     manifest = {"step": step, "extra": extra or {}, "leaves": {}}
     for i, (key, arr) in enumerate(sorted(flat.items())):
@@ -57,13 +78,19 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict
         if dtype == "bfloat16":  # numpy can't round-trip ml_dtypes natively
             arr = arr.view(np.uint16)
         np.save(os.path.join(tmp, fname), arr)
+        _crash_point("leaf")
+        # stored_dtype records the on-disk view so restore can assert the
+        # round-trip (bf16 is written as uint16 and viewed back).
         manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
-                                   "dtype": dtype}
+                                   "dtype": dtype,
+                                   "stored_dtype": str(arr.dtype)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
+    _crash_point("pre_rename")
     os.rename(tmp, final)
+    _crash_point("post_rename")
     return final
 
 
@@ -86,13 +113,31 @@ def restore_checkpoint(ckpt_dir: str, template: Any, *, step: Optional[int] = No
         key = _SEP.join(_part(p) for p in pth)
         rec = leaves_by_key[key]
         arr = np.load(os.path.join(path, rec["file"]))
+        stored = rec.get("stored_dtype", str(arr.dtype))
+        if str(arr.dtype) != stored:
+            raise ValueError(
+                f"leaf {key!r}: on-disk dtype {arr.dtype} != recorded "
+                f"stored_dtype {stored!r} — checkpoint corrupt or written "
+                "by an incompatible version")
         if rec["dtype"] == "bfloat16":
             import ml_dtypes
 
+            # uint16 view back to true bf16 — bit-exact round trip; the
+            # assert locks the restored leaf to real bf16, not a raw view.
             arr = arr.view(ml_dtypes.bfloat16)
+            assert arr.dtype == ml_dtypes.bfloat16
         sh = flat_shard[i][1] if flat_shard is not None else None
         out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
     return step, jax.tree_util.tree_unflatten(flat_template[1], out)
+
+
+def checkpoint_extra(ckpt_dir: str, step: int) -> dict:
+    """The ``extra`` metadata dict of a saved checkpoint, without loading
+    any leaves — resumable fits read this first to validate the config
+    hash before touching the (possibly large) accumulator arrays."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -1,0 +1,180 @@
+"""Crash-resumable streamed FALKON fits (DESIGN.md §11).
+
+``resumable_streamed_fit`` is the out-of-core fit with durability bolted on
+at the only boundary where it is well-defined: the **chunk barrier**. After
+every ``ckpt_every``-th chunk the complete solver state — the (M, M)/(M, k)
+normal-equation accumulators, the chunk cursor, the caller's PRNG key and a
+config hash — goes through the atomic-rename manifest machinery of
+``repro.checkpoint`` (temp dir + ``os.rename``; ``latest_step`` can never
+observe a torn write). A fit killed at chunk i restarts from the last
+barrier <= i and replays the remaining chunks **into the same bits**:
+
+  * fp32 leaves round-trip bit-exactly through ``.npy``,
+  * chunk-order accumulation is deterministic (DESIGN.md §10),
+  * the final solve is a pure function of (H, b, centers, lam, iters),
+
+so resumed-alpha == uninterrupted-alpha exactly, not just to tolerance —
+the chaos suite asserts bitwise equality.
+
+Refusal policy: the checkpoint records a SHA-256 config hash over the
+kernel, data shape/chunking, target shape, centers digest, a_diag digest,
+lam, iters and the inner backend name. Resume re-derives the hash from the
+live arguments and raises ``ResumeMismatchError`` on any difference — a
+checkpoint from a different run is refused loudly, never silently blended.
+Same for an accumulator shape mismatch (belt and suspenders: the hash
+already covers shapes). Delete the checkpoint directory to start fresh.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import (checkpoint_extra, latest_step, restore_checkpoint,
+                          save_checkpoint)
+from ..core import health
+from ..core.falkon import FalkonModel
+from ..core.gram import BackendLike, Kernel, resolve_backend
+from ..stream.store import ChunkStore
+from .accumulate import absorb, solve_accumulators
+
+Array = jax.Array
+
+#: Checkpoint schema version — bumped on any layout change; a mismatch is a
+#: refused resume, not a guess.
+SCHEMA = 1
+
+
+class ResumeMismatchError(RuntimeError):
+    """A checkpoint's config hash / shapes do not match the live fit —
+    resuming would silently blend incompatible runs, so we refuse."""
+
+
+def _digest(arr) -> str:
+    """SHA-256 of an array's dtype, shape and bytes (host-side)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def fit_config_hash(kernel: Kernel, store: ChunkStore, centers, a_diag,
+                    lam: float, iters: int, inner_name: str) -> str:
+    """The identity of one durable fit: every input that shapes the
+    accumulation or the solve. Two fits share a hash iff their checkpoints
+    are interchangeable at a chunk barrier."""
+    payload = {
+        "schema": SCHEMA,
+        "kernel": [kernel.name, float(kernel.sigma), float(kernel.kappa_sq)],
+        "data": [int(store.shape[0]), int(store.shape[1]), int(store.chunk)],
+        "targets": list(np.shape(store.y)),
+        "centers": _digest(centers),
+        "a_diag": _digest(a_diag),
+        "lam": float(lam),
+        "iters": int(iters),
+        "inner": inner_name,
+    }
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+def resumable_streamed_fit(
+    kernel: Kernel,
+    x,
+    y=None,
+    centers: Array = None,
+    lam: float = 1e-6,
+    *,
+    a_diag: Array | None = None,
+    iters: int = 20,
+    backend: BackendLike = "stream",
+    ckpt_dir: str,
+    ckpt_every: int = 4,
+    key: Array | None = None,
+) -> FalkonModel:
+    """Out-of-core FALKON fit, checkpointed at chunk barriers.
+
+    ``x`` is a ``ChunkStore`` carrying y, or a host/device array with ``y``
+    given separately (a store is built). ``backend`` picks the per-tile
+    Gram backend — ``"stream"`` / ``"stream:pallas"`` etc.; a non-stream
+    spec is used directly as the tile builder. ``key``, if given, is a JAX
+    PRNG key that rides the checkpoint (sampler-driven pipelines resume
+    with the key they crashed with).
+
+    On entry, if ``ckpt_dir`` holds a checkpoint: validate its config hash
+    against the live arguments (``ResumeMismatchError`` on mismatch),
+    restore (H, b, cursor) and replay only chunks >= cursor. The returned
+    alpha is bit-identical to an uninterrupted fit — see module docstring.
+    """
+    if isinstance(x, ChunkStore):
+        store = x
+        if store.y is None:
+            raise ValueError("resumable_streamed_fit needs targets; build "
+                             "the ChunkStore with y")
+    else:
+        if y is None:
+            raise ValueError("resumable_streamed_fit needs targets y")
+        store = ChunkStore(x, y)
+    n = store.shape[0]
+    be = resolve_backend(backend, n=n)
+    inner = getattr(be, "inner", be)
+    centers = jnp.asarray(centers, jnp.float32)
+    m = centers.shape[0]
+    a_diag = (jnp.ones((m,), jnp.float32) if a_diag is None
+              else jnp.asarray(a_diag, jnp.float32))
+    cfg_hash = fit_config_hash(kernel, store, centers, a_diag, lam, iters,
+                               getattr(inner, "name", "jnp"))
+
+    k_shape = store.y.shape[1:]
+    h = jnp.zeros((m, m), jnp.float32)
+    b = jnp.zeros((m,) + k_shape, jnp.float32)
+    key_data = (np.zeros((), np.uint32) if key is None
+                else np.asarray(jax.random.key_data(key)))
+    cursor = 0
+
+    step0 = latest_step(ckpt_dir)
+    if step0 is not None:
+        extra = checkpoint_extra(ckpt_dir, step0)
+        if extra.get("config_hash") != cfg_hash or extra.get("schema") != SCHEMA:
+            raise ResumeMismatchError(
+                f"checkpoint under {ckpt_dir!r} (step {step0}) was written "
+                "by a different fit configuration (config hash "
+                f"{extra.get('config_hash', '?')[:12]}... != "
+                f"{cfg_hash[:12]}...); refusing to blend incompatible runs "
+                "— delete the checkpoint directory to start fresh")
+        _, tree = restore_checkpoint(
+            ckpt_dir, {"h": h, "b": b, "key": key_data}, step=step0)
+        if (tuple(tree["h"].shape) != (m, m)
+                or tuple(tree["b"].shape) != (m,) + k_shape):
+            raise ResumeMismatchError(
+                f"checkpoint accumulators {tuple(tree['h'].shape)}/"
+                f"{tuple(tree['b'].shape)} do not match the live fit "
+                f"({(m, m)}/{(m,) + k_shape})")
+        h, b = tree["h"], tree["b"]
+        key_data = np.asarray(tree["key"])
+        cursor = int(extra["cursor"])
+        health.record_event("durable_fit_resume", step=step0, cursor=cursor)
+
+    slices = store.chunk_slices()
+    for i in range(cursor, len(slices)):
+        sl = slices[i]
+        h, b = absorb(kernel, store.x[sl], store.y[sl], centers, h, b,
+                      inner=inner, chunk=store.chunk)
+        done = i + 1
+        if done == len(slices) or done % max(1, ckpt_every) == 0:
+            save_checkpoint(
+                ckpt_dir, done, {"h": h, "b": b, "key": key_data},
+                extra={"config_hash": cfg_hash, "schema": SCHEMA,
+                       "cursor": done, "rows": int(sl.stop)})
+
+    alpha, resid = solve_accumulators(kernel, h, b, centers, lam, n,
+                                      a_diag=a_diag, iters=iters)
+    return FalkonModel(centers=centers, alpha=alpha, kernel=kernel,
+                       backend=be,
+                       diagnostics=health.SolveDiagnostics(resid),
+                       lam=float(lam), n_train=n, a_diag=a_diag)

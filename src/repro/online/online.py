@@ -1,0 +1,259 @@
+"""Online FALKON: incremental appends, warm refits, background center
+refresh (DESIGN.md §11).
+
+``OnlineFalkon`` keeps the streamed normal-equation accumulators
+
+    H = K_nM^T K_nM    b = K_nM^T y
+
+live between fits. Incoming (x, y) rows are appended to the host
+``ChunkStore`` and folded into (H, b) in O(batch) — no re-streaming of old
+data — and a **warm refit** solves (H + lam n K_MM) alpha = b in
+O(M^2 iters), independent of n: the data pass is paid once per row, ever.
+The solve rides one cached jit executable (the fused accumulator solve),
+so steady-state refits are a single compiled dispatch.
+
+Ingest fence (always on): appended rows pass ``health.check_finite``
+*before* touching the store or the accumulators — a NaN row is rejected
+with the state untouched (accumulators are contaminated forever by one bad
+row; the store could be repaired, the sums could not). The chaos suite
+drives this with the ``online.corrupt_row`` injection point, which poisons
+a row upstream of the fence.
+
+Center refresh: the center set ages as the data distribution drifts, so
+``refresh_centers`` re-draws it with any pluggable fast sampler (BLESS /
+uniform / the spectral-approximation sampler — anything with the
+``repro.api`` ``Sampler`` protocol's ``.sample``), then rebuilds (H, b)
+against the new centers in one streamed pass. With ``background=True`` the
+rebuild runs in a worker thread against a snapshot row count while the
+foreground keeps appending/serving on the old accumulators;
+``join_refresh`` absorbs the rows that arrived mid-rebuild (the delta) and
+swaps the new state in. The refreshed model reaches live traffic via
+``AsyncKrrServer.swap_model`` — probe-fenced, atomic at wave granularity.
+
+Duck-typed sampler on purpose: ``repro.online`` sits below ``repro.api``
+in the import order (api re-exports OnlineFalkon), so the sampler protocol
+is structural here, never imported.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import health
+from ..core.falkon import FalkonModel
+from ..core.gram import BackendLike, Kernel, resolve_backend
+from ..stream.store import ChunkStore
+from ..testing import faults
+from .accumulate import absorb, solve_accumulators
+
+Array = jax.Array
+
+
+class OnlineFalkon:
+    """Incrementally-updatable FALKON over a growing ``ChunkStore``.
+
+    Args:
+      kernel: the ``repro.core.gram.Kernel``.
+      centers: initial (M, d) center set (e.g. a BLESS draw on the seed
+        batch).
+      lam: ridge regularization (paper convention, scaled by n at solve
+        time — n is the *current* row count at each refit).
+      x, y: the seed batch; ``x`` may be a ``ChunkStore`` already carrying
+        y. Absorbed into the accumulators at construction.
+      a_diag: sampler weights diag(A) for the preconditioner (None = I).
+      iters: CG iterations per refit.
+      backend: tile-builder spec ("stream", "stream:pallas", an instance,
+        or None for the platform heuristic); also recorded on the fitted
+        model for serving.
+      sampler: optional default sampler for ``refresh_centers``.
+
+    Attributes:
+      model_: the latest refitted ``FalkonModel`` (None before ``refit``).
+      counters: appends / rows / rejected / refits / refreshes — the
+        provenance operators read alongside the serving stats.
+    """
+
+    def __init__(self, kernel: Kernel, centers, lam: float, *, x, y=None,
+                 a_diag=None, iters: int = 20,
+                 backend: BackendLike = "stream", sampler=None,
+                 chunk: int | None = None):
+        self.kernel = kernel
+        self.lam = float(lam)
+        self.iters = int(iters)
+        self.sampler = sampler
+        if isinstance(x, ChunkStore):
+            if x.y is None:
+                raise ValueError("OnlineFalkon needs targets; build the "
+                                 "ChunkStore with y")
+            self.store = x
+        else:
+            if y is None:
+                raise ValueError("OnlineFalkon needs targets y")
+            self.store = ChunkStore(x, y, chunk=chunk)
+        self.backend = resolve_backend(backend, n=self.store.shape[0])
+        self._inner = getattr(self.backend, "inner", self.backend)
+        self.centers = jnp.asarray(centers, jnp.float32)
+        m = self.centers.shape[0]
+        if self.centers.ndim != 2 or self.centers.shape[1] != self.store.shape[1]:
+            raise ValueError(f"centers must be (M, {self.store.shape[1]}), "
+                             f"got {tuple(self.centers.shape)}")
+        self.a_diag = (None if a_diag is None
+                       else jnp.asarray(a_diag, jnp.float32))
+        self._k_shape = self.store.y.shape[1:]
+        self._h = jnp.zeros((m, m), jnp.float32)
+        self._b = jnp.zeros((m,) + self._k_shape, jnp.float32)
+        self._h, self._b = absorb(self.kernel, self.store.x, self.store.y,
+                                  self.centers, self._h, self._b,
+                                  inner=self._inner, chunk=self.store.chunk)
+        self.model_: Optional[FalkonModel] = None
+        self.counters = {"appends": 0, "rows": int(self.store.shape[0]),
+                         "rejected": 0, "refits": 0, "refreshes": 0}
+        self._refresh_thread: Optional[threading.Thread] = None
+        self._refresh_result: Optional[tuple] = None
+        self._refresh_error: Optional[BaseException] = None
+
+    # -- ingest ---------------------------------------------------------------
+
+    def append(self, x_new, y_new) -> int:
+        """Absorb a batch of rows; returns the new total row count.
+
+        The finite-input fence is always on: a batch carrying NaN/Inf (bit
+        rot, a bad upstream join — or the ``online.corrupt_row`` chaos
+        point) raises ``health.NonFiniteError`` with the store and the
+        accumulators **untouched**. Rejections are counted and logged to
+        the health event log.
+        """
+        x_new = jnp.asarray(x_new, jnp.float32)
+        y_new = jnp.asarray(y_new, jnp.float32)
+        d = self.store.shape[1]
+        if x_new.ndim != 2 or x_new.shape[1] != d or x_new.shape[0] == 0:
+            raise ValueError(f"append batch must be non-empty (r, {d}), "
+                             f"got {tuple(x_new.shape)}")
+        if (y_new.shape[0] != x_new.shape[0]
+                or y_new.shape[1:] != self._k_shape):
+            raise ValueError(f"append targets {tuple(y_new.shape)} do not "
+                             f"match x rows {x_new.shape[0]} and output "
+                             f"shape {tuple(self._k_shape)}")
+        if faults.active():  # chaos: poison a row upstream of the fence
+            x_new = faults.corrupt("online.corrupt_row", x_new)
+        try:
+            health.check_finite(x_new, "online append X")
+            health.check_finite(y_new, "online append y")
+        except health.NonFiniteError:
+            self.counters["rejected"] += 1
+            health.record_event("online_append_rejected",
+                                rows=int(x_new.shape[0]))
+            raise
+        xh = np.asarray(x_new)
+        yh = np.asarray(y_new)
+        self.store.append(xh, yh)
+        self._h, self._b = absorb(self.kernel, xh, yh, self.centers,
+                                  self._h, self._b, inner=self._inner,
+                                  chunk=self.store.chunk)
+        self.counters["appends"] += 1
+        self.counters["rows"] = int(self.store.shape[0])
+        return self.counters["rows"]
+
+    # -- refit ----------------------------------------------------------------
+
+    def refit(self) -> FalkonModel:
+        """Warm refit from the live accumulators: one cached compiled solve,
+        O(M^2 iters), no data pass. Returns (and stores) the new model."""
+        n = self.store.shape[0]
+        alpha, resid = solve_accumulators(
+            self.kernel, self._h, self._b, self.centers, self.lam, n,
+            a_diag=self.a_diag, iters=self.iters)
+        self.model_ = FalkonModel(
+            centers=self.centers, alpha=alpha, kernel=self.kernel,
+            backend=self.backend,
+            diagnostics=health.SolveDiagnostics(resid),
+            lam=self.lam, n_train=n,
+            a_diag=(jnp.ones((self.centers.shape[0],), jnp.float32)
+                    if self.a_diag is None else self.a_diag))
+        self.counters["refits"] += 1
+        return self.model_
+
+    # -- center refresh --------------------------------------------------------
+
+    def _build_refresh(self, key, sampler, n_snapshot: int):
+        """Draw new centers and rebuild (H, b) over rows [0, n_snapshot)."""
+        cs = sampler.sample(key, self.store, self.kernel,
+                            backend=self.backend)
+        m = int(cs.count)
+        centers = jnp.asarray(self.store[np.asarray(cs.idx)[:m]], jnp.float32)
+        a_diag = jnp.asarray(cs.weight[:m], jnp.float32)
+        h = jnp.zeros((m, m), jnp.float32)
+        b = jnp.zeros((m,) + self._k_shape, jnp.float32)
+        h, b = absorb(self.kernel, self.store.x[:n_snapshot],
+                      self.store.y[:n_snapshot], centers, h, b,
+                      inner=self._inner, chunk=self.store.chunk)
+        return centers, a_diag, h, b, n_snapshot
+
+    def _install_refresh(self, result) -> None:
+        """Swap refreshed state in, absorbing any rows appended since the
+        snapshot (the delta) against the new centers first."""
+        centers, a_diag, h, b, n_snapshot = result
+        n_now = self.store.shape[0]
+        if n_now > n_snapshot:
+            h, b = absorb(self.kernel, self.store.x[n_snapshot:n_now],
+                          self.store.y[n_snapshot:n_now], centers, h, b,
+                          inner=self._inner, chunk=self.store.chunk)
+        self.centers, self.a_diag = centers, a_diag
+        self._h, self._b = h, b
+        self.counters["refreshes"] += 1
+        health.record_event("online_center_refresh",
+                            m=int(centers.shape[0]), rows=n_now)
+
+    def refresh_centers(self, key: Array, *, sampler=None,
+                        background: bool = False) -> None:
+        """Re-draw the center set and rebuild the accumulators against it.
+
+        ``sampler`` (or the constructor default) is any object with the
+        ``Sampler`` protocol's ``.sample(key, x, kernel, backend=...)``.
+        Inline by default; with ``background=True`` the sampling + rebuild
+        run in a worker thread over a snapshot of the current rows while
+        appends continue against the old state — call ``join_refresh`` to
+        absorb the delta and swap. The refreshed model only reaches traffic
+        after the next ``refit`` (+ server ``swap_model``).
+        """
+        sampler = sampler if sampler is not None else self.sampler
+        if sampler is None:
+            raise ValueError("refresh_centers needs a sampler (argument or "
+                             "constructor default)")
+        if self._refresh_thread is not None:
+            raise RuntimeError("a background refresh is already running; "
+                               "join_refresh() it first")
+        n_snapshot = self.store.shape[0]
+        if not background:
+            self._install_refresh(
+                self._build_refresh(key, sampler, n_snapshot))
+            return
+
+        def _work():
+            try:
+                self._refresh_result = self._build_refresh(
+                    key, sampler, n_snapshot)
+            except BaseException as e:  # noqa: BLE001 — re-raised on join
+                self._refresh_error = e
+
+        self._refresh_thread = threading.Thread(target=_work, daemon=True)
+        self._refresh_thread.start()
+
+    def join_refresh(self) -> bool:
+        """Wait for a background refresh and install it (delta-absorbed).
+        Returns True if a refresh was installed, False if none was running.
+        Re-raises any error the worker hit (old state stays live)."""
+        if self._refresh_thread is None:
+            return False
+        self._refresh_thread.join()
+        self._refresh_thread = None
+        err, self._refresh_error = self._refresh_error, None
+        result, self._refresh_result = self._refresh_result, None
+        if err is not None:
+            raise err
+        self._install_refresh(result)
+        return True

@@ -1,7 +1,7 @@
 from .async_krr import (AsyncKrrServer, QueueFull, RequestStatus, ServeConfig)
 from .engine import ServeEngine, prefill, sample_greedy
-from .krr import KrrServer, pow2_bucket
+from .krr import KrrServer, pow2_bucket, probe_model
 
 __all__ = ["ServeEngine", "prefill", "sample_greedy", "KrrServer",
-           "pow2_bucket", "AsyncKrrServer", "ServeConfig", "RequestStatus",
-           "QueueFull"]
+           "pow2_bucket", "probe_model", "AsyncKrrServer", "ServeConfig",
+           "RequestStatus", "QueueFull"]

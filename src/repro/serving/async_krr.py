@@ -27,6 +27,11 @@ failure domains:
     ``slo``, the server switches to ``fallback_model`` (e.g. a coarser
     center set) until p99 recovers below ``recover_factor * slo``
     (hysteresis, so it doesn't flap).
+  * **Zero-downtime model swaps.** ``swap_model`` replaces the served
+    model under live traffic, atomic at wave granularity behind a pre-swap
+    health probe; swap provenance (swaps / swaps_rejected / model_version /
+    last_swap) lands in ``stats`` and every request is tagged with the
+    generation that served it (DESIGN.md §11).
 
 Deterministic tests drive this with ``repro.testing.faults`` (injected NaN
 tiles / latency) and ``VirtualClock`` via the ``clock=`` hook.
@@ -51,9 +56,13 @@ import numpy as np
 from ..core import health
 from ..core.falkon import FalkonModel
 from ..core.gram import BackendLike
-from .krr import pow2_bucket
+from .krr import pow2_bucket, probe_model
 
 Array = jax.Array
+
+#: swap_model sentinel: "leave the fallback model alone" (None is a real
+#: value — it clears the fallback).
+_KEEP = object()
 
 
 class QueueFull(RuntimeError):
@@ -82,6 +91,11 @@ class Request:
     status: RequestStatus = RequestStatus.QUEUED
     result: Optional[Array] = None
     error: Optional[str] = None
+    #: stats["model_version"] at dispatch time — which model generation
+    #: served this request (None until dispatched). Chaos tests use it to
+    #: prove swap atomicity: every DONE result matches exactly the tagged
+    #: generation's predictions, never a mix.
+    model_version: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +151,7 @@ class _Wave:
     pred: Optional[Array]
     started: float
     degraded: bool
+    version: int = 0  # model generation this wave was packed against
 
 
 def _unwrap(model) -> FalkonModel:
@@ -183,10 +198,17 @@ class AsyncKrrServer:
         self._requests: Dict[int, Request] = {}
         self._next_rid = 0
         self._latencies: Deque[float] = collections.deque(maxlen=config.slo_window)
+        # Model provenance (DESIGN.md §11): swaps / swaps_rejected count
+        # accepted and probe-rejected swap_model calls, model_version is the
+        # current generation (0 = construction-time model; every dispatched
+        # wave and request is tagged with it), last_swap the clock time of
+        # the latest accepted swap (None = never) — model age is
+        # clock() - last_swap.
         self.stats = {"requests": 0, "rows": 0, "dispatches": 0,
                       "padded_rows": 0, "buckets": set(), "wave_failures": 0,
                       "splits": 0, "shed": 0, "expired": 0, "failed": 0,
-                      "degraded_waves": 0}
+                      "degraded_waves": 0, "swaps": 0, "swaps_rejected": 0,
+                      "model_version": 0, "last_swap": None}
 
     # -- intake --------------------------------------------------------------
 
@@ -231,6 +253,58 @@ class AsyncKrrServer:
         self.stats["requests"] += 1
         self.stats["rows"] += x.shape[0]
         return req.rid
+
+    # -- model lifecycle -----------------------------------------------------
+
+    def swap_model(self, model, *, fallback_model=_KEEP,
+                   probe_x: Optional[Array] = None) -> bool:
+        """Zero-downtime model swap, atomic at wave granularity.
+
+        The model is read once per wave at dispatch time, so the swap needs
+        no locking or draining: waves already in flight complete on the old
+        model, every wave packed after this call predicts with the new one,
+        and no wave ever mixes the two. Queued (not yet dispatched)
+        requests route to the new model — they have not been predicted yet.
+
+        The candidate first passes the ``probe_model`` health fence (finite
+        alpha + finite predictions on ``probe_x``, defaulting to the
+        candidate's own centers). A poisoned candidate is REJECTED — the
+        method returns False, ``stats["swaps_rejected"]`` increments, the
+        incumbent keeps serving, and the fallback/degradation machinery is
+        untouched — so a bad refit can never take down clean traffic.
+
+        On success: ``stats`` gains the provenance (``swaps`` increments,
+        ``model_version`` bumps, ``last_swap`` = now) and True is returned.
+        ``fallback_model`` optionally replaces the degraded-mode model in
+        the same call (None clears it); omitted = kept. ``ValueError``
+        (unfitted estimator, feature-dim mismatch) propagates — caller
+        bugs are not "rejections".
+        """
+        try:
+            mdl = probe_model(model, probe_x, backend=self.backend)
+        except ValueError:
+            raise
+        except Exception as e:  # noqa: BLE001 — a failing probe IS the signal
+            self.stats["swaps_rejected"] += 1
+            health.record_event("swap_rejected", error=repr(e))
+            return False
+        d = self.model.centers.shape[1]
+        if mdl.centers.shape[1] != d:
+            raise ValueError(f"swap candidate feature dim "
+                             f"{mdl.centers.shape[1]} != {d}")
+        if fallback_model is not _KEEP:
+            fb = None if fallback_model is None else _unwrap(fallback_model)
+            if fb is not None and fb.centers.shape[1] != d:
+                raise ValueError(f"fallback model feature dim "
+                                 f"{fb.centers.shape[1]} != {d}")
+            self.fallback_model = fb
+        self.model = mdl
+        self.stats["swaps"] += 1
+        self.stats["model_version"] += 1
+        self.stats["last_swap"] = float(self.clock())
+        health.record_event("model_swap",
+                            version=self.stats["model_version"])
+        return True
 
     # -- serving loop --------------------------------------------------------
 
@@ -316,8 +390,12 @@ class AsyncKrrServer:
         self.stats["buckets"].add(bucket)
         if degraded:
             self.stats["degraded_waves"] += 1
+        version = self.stats["model_version"]
         for r in wave:
             r.status = RequestStatus.IN_FLIGHT
+            # tagged at dispatch — the whole wave shares one model, so a
+            # swap between waves can never split a wave across generations.
+            r.model_version = version
         # predict is async-dispatched: the host returns with a future-backed
         # Array and keeps packing while the device (or injected fault) runs.
         # An *eager* dispatch failure (e.g. a kernel raising at launch) is a
@@ -326,10 +404,12 @@ class AsyncKrrServer:
             pred = model.predict(xp, backend=self.backend)
         except Exception as e:  # noqa: BLE001 — isolated, never propagated
             self._wave_failed(_Wave(requests=wave, rows=rows, pred=None,
-                                    started=started, degraded=degraded), e)
+                                    started=started, degraded=degraded,
+                                    version=version), e)
             return False
         self._inflight.append(_Wave(requests=wave, rows=rows, pred=pred,
-                                    started=started, degraded=degraded))
+                                    started=started, degraded=degraded,
+                                    version=version))
         return True
 
     def _complete_oldest(self) -> None:

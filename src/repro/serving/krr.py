@@ -29,11 +29,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Tuple, Union
+import time
+from typing import Callable, Deque, Dict, List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from ..core import health
 from ..core.falkon import FalkonModel
 from ..core.gram import BackendLike
 
@@ -43,6 +45,34 @@ Array = jax.Array
 def pow2_bucket(rows: int, min_bucket: int) -> int:
     """Smallest power-of-two >= rows, floored at min_bucket."""
     return max(min_bucket, 1 << max(0, rows - 1).bit_length())
+
+
+def probe_model(model, probe_x: Array | None = None, *,
+                backend: BackendLike = None) -> FalkonModel:
+    """Pre-swap health probe (DESIGN.md §11): returns the unwrapped model
+    or raises.
+
+    Two fences, in order: the candidate's alpha must be finite
+    (``health.NonFiniteError`` otherwise — a diverged refit), and its
+    predictions on a probe batch must be finite. ``probe_x`` defaults to a
+    prefix of the candidate's own centers — rows guaranteed in-distribution
+    for any model, so a probe failure always indicts the model, never the
+    probe. A candidate that cannot predict finitely on its own centers must
+    not reach live traffic.
+
+    Raises ``ValueError`` on an unfitted estimator (a programming error,
+    not a poisoned model — callers should not swallow it).
+    """
+    mdl = model if hasattr(model, "centers") else getattr(model, "model_", None)
+    if mdl is None:
+        raise ValueError(f"{type(model).__name__} has no fitted model; "
+                         "call .fit before swapping it in")
+    health.check_finite(mdl.alpha, "swap candidate alpha")
+    if probe_x is None:
+        probe_x = mdl.centers[: min(8, mdl.centers.shape[0])]
+    pred = mdl.predict(jnp.asarray(probe_x), backend=backend)
+    health.check_finite(pred, "swap candidate probe predictions")
+    return mdl
 
 
 @dataclasses.dataclass
@@ -58,12 +88,22 @@ class KrrServer:
         out alone, padded to its own pow2 bucket).
       min_bucket: smallest padded bucket; keeps tiny waves off sub-tile
         shapes and bounds the bucket count from below.
+      clock: monotonic-seconds callable stamping swap provenance (inject
+        ``VirtualClock`` in tests).
+
+    Model-provenance stats (see DESIGN.md §11; NOTE ``reset()`` wipes them
+    with the rest of the counters): ``swaps`` / ``swaps_rejected`` count
+    accepted and probe-rejected ``swap_model`` calls, ``model_version``
+    increments per accepted swap (0 = the construction-time model), and
+    ``last_swap`` is the clock time of the latest accepted swap (None =
+    never swapped) — model age is ``clock() - last_swap``.
     """
 
     model: Union[FalkonModel, object]  # object: any fitted repro.api estimator
     backend: BackendLike = None
     max_wave: int = 4096
     min_bucket: int = 64
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
         if self.max_wave < 1 or self.min_bucket < 1:
@@ -85,9 +125,42 @@ class KrrServer:
         self._next_rid = 0
         self._pending_rows = 0
         # serving counters: dispatches vs requests is the batching win;
-        # padded_rows / rows the padding overhead; buckets the jit-cache set.
+        # padded_rows / rows the padding overhead; buckets the jit-cache set;
+        # swaps / swaps_rejected / model_version / last_swap the model
+        # provenance (class docstring).
         self.stats = {"requests": 0, "rows": 0, "dispatches": 0,
-                      "padded_rows": 0, "buckets": set()}
+                      "padded_rows": 0, "buckets": set(), "swaps": 0,
+                      "swaps_rejected": 0, "model_version": 0,
+                      "last_swap": None}
+
+    def swap_model(self, model, *, probe_x: Array | None = None) -> bool:
+        """Swap the served model after a ``probe_model`` health fence.
+
+        Returns True on success (provenance stats updated), False if the
+        probe rejected the candidate — the current model keeps serving, so
+        a poisoned refit can never take down clean traffic. ``ValueError``
+        (unfitted estimator, feature-dim mismatch) propagates: that is a
+        caller bug, not a bad model.
+        """
+        try:
+            mdl = probe_model(model, probe_x, backend=self.backend)
+        except ValueError:
+            raise
+        except Exception as e:  # noqa: BLE001 — a failing probe IS the signal
+            self.stats["swaps_rejected"] += 1
+            health.record_event("swap_rejected", error=repr(e))
+            return False
+        d = self.model.centers.shape[1]
+        if mdl.centers.shape[1] != d:
+            raise ValueError(f"swap candidate feature dim "
+                             f"{mdl.centers.shape[1]} != {d}")
+        self.model = mdl
+        self.stats["swaps"] += 1
+        self.stats["model_version"] += 1
+        self.stats["last_swap"] = float(self.clock())
+        health.record_event("model_swap",
+                            version=self.stats["model_version"])
+        return True
 
     def submit(self, x: Array) -> int:
         """Queue a (r, d) request; returns its id (see flush)."""

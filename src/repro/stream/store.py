@@ -130,23 +130,76 @@ class ChunkStore:
     """
 
     def __init__(self, x, y=None, *, chunk: int | None = None):
-        self.x = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
-        if self.x.ndim != 2:
-            raise ValueError(f"ChunkStore x must be (n, d), got {self.x.shape}")
-        self.y = None
+        xb = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+        if xb.ndim != 2:
+            raise ValueError(f"ChunkStore x must be (n, d), got {xb.shape}")
+        self._n = xb.shape[0]
+        self._xbuf = xb
+        self._ybuf = None
         if y is not None:
-            self.y = np.ascontiguousarray(np.asarray(y, dtype=np.float32))
-            if self.y.shape[0] != self.x.shape[0]:
+            yb = np.ascontiguousarray(np.asarray(y, dtype=np.float32))
+            if yb.shape[0] != self._n:
                 raise ValueError(
-                    f"y rows {self.y.shape[0]} != x rows {self.x.shape[0]}")
+                    f"y rows {yb.shape[0]} != x rows {self._n}")
+            self._ybuf = yb
         self.chunk = max(1, int(chunk) if chunk is not None else default_chunk())
+
+    def append(self, x_new, y_new=None) -> int:
+        """Append rows to the store (amortized O(1): capacity-doubling host
+        buffers, so the online ingest path never re-copies the history per
+        batch). Returns the new row count.
+
+        Existing rows never move or change value — ``x``/``y`` are views of
+        a prefix that only grows, which is what lets a background center
+        refresh read a row-count snapshot while appends continue.
+        """
+        xb = np.ascontiguousarray(np.asarray(x_new, dtype=np.float32))
+        if xb.ndim != 2 or xb.shape[1] != self._xbuf.shape[1]:
+            raise ValueError(f"append rows must be (r, {self._xbuf.shape[1]}), "
+                             f"got {xb.shape}")
+        yb = None
+        if self._ybuf is not None:
+            if y_new is None:
+                raise ValueError("this store carries y; append needs y_new")
+            yb = np.ascontiguousarray(np.asarray(y_new, dtype=np.float32))
+            if yb.shape[0] != xb.shape[0] or yb.shape[1:] != self._ybuf.shape[1:]:
+                raise ValueError(
+                    f"y_new shape {yb.shape} does not match {xb.shape[0]} "
+                    f"rows of {self._ybuf.shape[1:]} targets")
+        elif y_new is not None:
+            raise ValueError("this store has no y; cannot append y_new")
+        need = self._n + xb.shape[0]
+        if need > self._xbuf.shape[0]:
+            cap = max(need, 2 * self._xbuf.shape[0])
+            grown = np.empty((cap,) + self._xbuf.shape[1:], np.float32)
+            grown[: self._n] = self._xbuf[: self._n]
+            self._xbuf = grown
+            if self._ybuf is not None:
+                growny = np.empty((cap,) + self._ybuf.shape[1:], np.float32)
+                growny[: self._n] = self._ybuf[: self._n]
+                self._ybuf = growny
+        self._xbuf[self._n:need] = xb
+        if yb is not None:
+            self._ybuf[self._n:need] = yb
+        self._n = need
+        return self._n
 
     # -- array-like surface --------------------------------------------------
 
     @property
+    def x(self) -> np.ndarray:
+        """The host (n, d) fp32 X — a contiguous view of the growth buffer."""
+        return self._xbuf[: self._n]
+
+    @property
+    def y(self) -> np.ndarray | None:
+        """The host (n,) / (n, k) fp32 targets (None when not stored)."""
+        return None if self._ybuf is None else self._ybuf[: self._n]
+
+    @property
     def shape(self) -> tuple[int, int]:
         """(n, d) of the stored X."""
-        return self.x.shape
+        return (self._n, self._xbuf.shape[1])
 
     @property
     def ndim(self) -> int:

@@ -25,10 +25,21 @@ Injection points (the registry rejects unknown names):
   ``kmm.indefinite``    shift a K_MM-like matrix indefinite before its
                         factorization (params: ``shift`` — multiples of
                         the mean diagonal subtracted, default 2.0).
+  ``ckpt.torn_write``   kill ``save_checkpoint`` mid-write — the hook fires
+                        at every filesystem step (params: ``stage`` — fire
+                        only at that named step, e.g. ``"pre_rename"`` =
+                        the torn window between the complete temp dir and
+                        the atomic rename; None = every step).
+  ``online.corrupt_row``  poison a row of a batch appended to
+                        ``OnlineFalkon`` with NaN (params: ``row`` — which
+                        row, default 0) — upstream of the finite-input
+                        fence, which must reject it.
 
 Arming is scoped by the ``fault`` context manager; ``times=N`` makes a
 fault fire on the first N hook hits then go inert (transient faults:
-"the first wave fails, the retry succeeds"). Hooks fire at *host dispatch
+"the first wave fails, the retry succeeds"), and ``skip=K`` makes it sit
+out the first K (matching) hits before firing — "kill at the K-th chunk
+barrier" without counting from the call site. Hooks fire at *host dispatch
 time*: jitted programs compiled before arming are cached and will not see
 a fault baked in — the production hook sites are all eager for exactly
 this reason, and chaos tests that touch traced paths clear jit caches.
@@ -54,6 +65,8 @@ POINTS = frozenset({
     "backend.error",
     "dispatch.latency",
     "kmm.indefinite",
+    "ckpt.torn_write",
+    "online.corrupt_row",
 })
 
 
@@ -63,12 +76,21 @@ class FaultInjected(RuntimeError):
 
 @dataclasses.dataclass
 class Fault:
-    """One armed fault: its point, remaining budget, and parameters."""
+    """One armed fault: its point, firing window, and parameters.
+
+    ``seen`` counts every *matching* hook hit (after any ``stage`` filter),
+    whether or not the fault fired — arming with ``times=0`` turns a fault
+    into a pure hit counter, which is how the checkpoint crash-window test
+    enumerates the filesystem steps of ``save_checkpoint``. ``skip`` holds
+    the fault inert for the first ``skip`` matching hits.
+    """
 
     point: str
     times: int | None = None  # fire at most N times; None = every hit
+    skip: int = 0  # sit out the first K matching hits
     params: dict = dataclasses.field(default_factory=dict)
     fired: int = 0
+    seen: int = 0
 
     @property
     def exhausted(self) -> bool:
@@ -84,17 +106,20 @@ def active() -> bool:
 
 
 @contextlib.contextmanager
-def fault(point: str, *, times: int | None = None, **params: Any) -> Iterator[Fault]:
+def fault(point: str, *, times: int | None = None, skip: int = 0,
+          **params: Any) -> Iterator[Fault]:
     """Arm ``point`` for the duration of the context; yields the Fault.
 
-    ``times`` bounds how many hook hits fire (None = every hit); extra
-    keyword arguments parameterize the point (see module docstring).
+    ``times`` bounds how many hook hits fire (None = every hit); ``skip``
+    holds the fault inert for the first K matching hits (fire *at* the
+    K-th chunk/step, not the first); extra keyword arguments parameterize
+    the point (see module docstring).
     """
     if point not in POINTS:
         raise ValueError(f"unknown fault point {point!r}; known: {sorted(POINTS)}")
     if point in _ACTIVE:
         raise RuntimeError(f"fault point {point!r} is already armed")
-    f = Fault(point=point, times=times, params=params)
+    f = Fault(point=point, times=times, skip=skip, params=params)
     _ACTIVE[point] = f
     try:
         yield f
@@ -102,12 +127,23 @@ def fault(point: str, *, times: int | None = None, **params: Any) -> Iterator[Fa
         _ACTIVE.pop(point, None)
 
 
-def _take(point: str) -> Fault | None:
-    """Consume one firing of ``point`` if armed and not exhausted."""
+def _take(point: str, tag: str | None = None) -> Fault | None:
+    """Consume one firing of ``point`` if armed and inside its window.
+
+    ``tag`` names the specific hook site (e.g. a ``save_checkpoint``
+    filesystem step); a fault armed with a ``stage`` parameter matches only
+    that tag, and only matching hits count against ``skip``/``times``.
+    """
     if not _ACTIVE:
         return None
     f = _ACTIVE.get(point)
-    if f is None or f.exhausted:
+    if f is None:
+        return None
+    stage = f.params.get("stage")
+    if stage is not None and tag is not None and stage != tag:
+        return None
+    f.seen += 1
+    if f.seen <= f.skip or f.exhausted:
         return None
     f.fired += 1
     return f
@@ -116,11 +152,19 @@ def _take(point: str) -> Fault | None:
 # -- hook functions (called from production dispatch sites) -----------------
 
 
-def raise_if(point: str = "backend.error") -> None:
-    """Raise ``FaultInjected`` if ``point`` is armed (dispatch-failure hook)."""
-    f = _take(point)
+def raise_if(point: str = "backend.error", *, tag: str | None = None) -> None:
+    """Raise ``FaultInjected`` if ``point`` is armed (dispatch-failure hook).
+
+    ``tag`` names the hook site for stage-targeted faults (see ``_take``);
+    the raised message carries both so chaos tests can assert *where* the
+    simulated kill landed.
+    """
+    f = _take(point, tag)
     if f is not None:
-        raise FaultInjected(f"injected fault at {point!r} (firing {f.fired})")
+        raise FaultInjected(
+            f"injected fault at {point!r}"
+            + (f" stage {tag!r}" if tag is not None else "")
+            + f" (firing {f.fired})")
 
 
 def sleep_if(point: str = "dispatch.latency", *, rows: int = 0, centers: int = 0) -> None:
@@ -145,7 +189,9 @@ def corrupt(point: str, x):
 
     ``gram.nan_tile`` poisons the first ``rows`` rows (default 1) of the
     tile with NaN; ``kmm.indefinite`` subtracts ``shift`` x the mean
-    diagonal from the diagonal, pushing the matrix indefinite.
+    diagonal from the diagonal, pushing the matrix indefinite;
+    ``online.corrupt_row`` sets row ``row`` (default 0) of an appended
+    batch to NaN — bit rot on the ingest path, upstream of the fence.
     """
     f = _take(point)
     if f is None:
@@ -157,6 +203,9 @@ def corrupt(point: str, x):
         shift = float(f.params.get("shift", 2.0))
         scale = shift * jnp.mean(jnp.diagonal(x))
         return x - scale * jnp.eye(x.shape[0], dtype=x.dtype)
+    if point == "online.corrupt_row":
+        row = int(f.params.get("row", 0))
+        return x.at[row].set(jnp.nan)
     raise ValueError(f"{point!r} is not a corruption point")
 
 

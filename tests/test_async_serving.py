@@ -217,3 +217,117 @@ def test_fallback_dim_mismatch(model):
                      x3[:10], 1e-2, iters=3, backend="jnp")
     with pytest.raises(ValueError, match="feature dim"):
         AsyncKrrServer(model, fallback_model=bad)
+
+
+# -- zero-downtime model swaps (DESIGN.md §11) --------------------------------
+
+
+def _model2():
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (400, 6))
+    y = jnp.cos(x[:, 0]) - 0.2 * x[:, 2]
+    return falkon_fit(KERN, x, y, x[:32], 1e-3, iters=15, backend="jnp")
+
+
+def test_swap_model_happy_path_and_provenance(model):
+    clk = VirtualClock()
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16), clock=clk)
+    assert srv.stats["model_version"] == 0 and srv.stats["last_swap"] is None
+    q = _reqs([(1, 8)])[0]
+    rid_old = srv.submit(q)
+    srv.run_until_idle()
+    m2 = _model2()
+    clk.advance(5.0)
+    assert srv.swap_model(m2)
+    rid_new = srv.submit(q)
+    srv.run_until_idle()
+    # provenance in stats
+    assert srv.stats["swaps"] == 1 and srv.stats["swaps_rejected"] == 0
+    assert srv.stats["model_version"] == 1
+    assert srv.stats["last_swap"] == 5.0  # model age = clock() - last_swap
+    # each request tagged with the generation that actually served it
+    assert srv._requests[rid_old].model_version == 0
+    assert srv._requests[rid_new].model_version == 1
+    np.testing.assert_allclose(srv.result(rid_old), model.predict(q),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(srv.result(rid_new), m2.predict(q),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_swap_accepts_fitted_estimator(model):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (300, 6))
+    est = FalkonRegressor(kernel=KERN, config=FitConfig(lam=1e-3, iters=8))
+    est.fit(x, jnp.sin(x[:, 0]))
+    srv = AsyncKrrServer(model)
+    assert srv.swap_model(est)
+    assert srv.model is est.model_
+
+
+def test_swap_rejects_poisoned_candidate(model):
+    import dataclasses
+
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    bad = dataclasses.replace(model, alpha=model.alpha.at[0].set(jnp.nan))
+    assert not srv.swap_model(bad)
+    assert srv.stats["swaps_rejected"] == 1 and srv.stats["swaps"] == 0
+    assert srv.stats["model_version"] == 0
+    assert srv.model is model  # incumbent keeps serving
+    q = _reqs([(2, 8)])[0]
+    rid = srv.submit(q)
+    srv.run_until_idle()
+    assert srv.status(rid) == RequestStatus.DONE
+    from repro.core import health
+    assert health.events("swap_rejected")
+
+
+def test_swap_probe_uses_probe_batch(model):
+    """A candidate that is finite on its centers but explodes on the probe
+    batch is caught by the explicit probe_x fence."""
+    srv = AsyncKrrServer(model)
+    # alpha scaled to overflow fp32 on any probe: predictions go inf
+    import dataclasses
+    bad = dataclasses.replace(model, alpha=model.alpha * jnp.float32(1e38))
+    assert not srv.swap_model(bad, probe_x=_reqs([(5, 4)])[0])
+    assert srv.stats["swaps_rejected"] == 1
+
+
+def test_swap_replaces_fallback_in_same_call(model):
+    m2 = _model2()
+    fb = _model2()
+    srv = AsyncKrrServer(model)
+    assert srv.swap_model(m2, fallback_model=fb)
+    assert srv.fallback_model is fb
+    assert srv.swap_model(model, fallback_model=None)  # clears it
+    assert srv.fallback_model is None
+    assert srv.swap_model(m2)  # omitted = kept (still None)
+    assert srv.fallback_model is None
+
+
+def test_swap_validation_errors_propagate(model):
+    srv = AsyncKrrServer(model)
+    with pytest.raises(ValueError, match="no fitted model"):
+        srv.swap_model(FalkonRegressor(kernel=KERN))
+    key = jax.random.PRNGKey(1)
+    x3 = jax.random.normal(key, (50, 3))
+    wrong_d = falkon_fit(make_kernel("gaussian", sigma=1.0), x3, x3[:, 0],
+                         x3[:10], 1e-2, iters=3, backend="jnp")
+    with pytest.raises(ValueError, match="feature dim"):
+        srv.swap_model(wrong_d)
+    assert srv.stats["swaps"] == 0  # neither counted as swap activity
+    assert srv.stats["swaps_rejected"] == 0
+
+
+def test_krr_server_swap_provenance(model):
+    from repro.serving import KrrServer
+
+    clk = VirtualClock()
+    ks = KrrServer(model, clock=clk)
+    clk.advance(2.0)
+    assert ks.swap_model(_model2())
+    assert ks.stats["swaps"] == 1 and ks.stats["model_version"] == 1
+    assert ks.stats["last_swap"] == 2.0
+    import dataclasses
+    bad = dataclasses.replace(model, alpha=model.alpha.at[0].set(jnp.inf))
+    assert not ks.swap_model(bad)
+    assert ks.stats["swaps_rejected"] == 1

@@ -4,7 +4,11 @@ fences *recover or isolate* — a NaN Gram tile fails only its own wave (and
 only its own request after bisection), a Poisson overload sheds/degrades
 while keeping served p99 inside the SLO, an indefinite K_MM either rides
 the jitter ladder or raises, and a dying primary backend falls back to the
-jnp streamer with correct results. Runs in its own CI job (-m chaos)."""
+jnp streamer with correct results. The §11 durability scenarios live here
+too: streamed fits killed at chunk barriers resume bit-identical, torn
+checkpoints are invisible to latest_step, poisoned appends are fenced, and
+hot swaps under Poisson load drop or misroute zero requests. Runs in its
+own CI job (-m chaos)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -288,3 +292,149 @@ def test_faulty_backend_delegates_when_quiet(model):
     q = _reqs([(5, 8)])[0]
     np.testing.assert_allclose(model.predict(q, backend=fb), model.predict(q),
                                rtol=1e-7, atol=1e-7)
+
+
+# -- durable online FALKON (DESIGN.md §11) ------------------------------------
+
+
+def _online_data(n=2400, d=4):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = (np.sin(2 * x[:, 0]) + 0.3 * x[:, 1]).astype(np.float32)
+    return x, y
+
+
+@pytest.mark.parametrize("stage,skip", [
+    ("post_rename", 0),   # killed right after the 1st barrier committed
+    ("post_rename", 1),   # killed mid-run after the 2nd barrier
+    ("pre_rename", 1),    # killed inside the torn window itself
+])
+def test_streamed_fit_killed_then_resumed_bit_identical(tmp_path, stage, skip):
+    """A streamed fit killed at an arbitrary chunk barrier resumes from the
+    last complete checkpoint and replays into a BIT-identical alpha — the
+    fp32 accumulators round-trip exactly and chunk-order accumulation is
+    deterministic, so resumed == uninterrupted, not just close."""
+    from repro.api import resumable_streamed_fit
+    from repro.stream import ChunkStore
+
+    x, y = _online_data()
+    centers = jnp.asarray(x[:48])
+    store = ChunkStore(x, y, chunk=512)  # 5 chunks; barriers at 2, 4, 5
+    ref = resumable_streamed_fit(KERN, store, centers=centers, lam=1e-3,
+                                 iters=25, ckpt_dir=str(tmp_path / "ref"),
+                                 ckpt_every=2)
+    killed = tmp_path / "killed"
+    with faults.fault("ckpt.torn_write", stage=stage, skip=skip, times=1):
+        with pytest.raises(faults.FaultInjected):
+            resumable_streamed_fit(KERN, store, centers=centers, lam=1e-3,
+                                   iters=25, ckpt_dir=str(killed),
+                                   ckpt_every=2)
+    resumed = resumable_streamed_fit(KERN, store, centers=centers, lam=1e-3,
+                                     iters=25, ckpt_dir=str(killed),
+                                     ckpt_every=2)
+    assert bool(jnp.all(resumed.alpha == ref.alpha))  # bitwise
+    assert health.events("durable_fit_resume")  # it really did resume
+
+
+def test_torn_checkpoint_never_observed_by_latest_step(tmp_path):
+    """A write killed between the complete temp dir and the atomic rename
+    leaves a ``.tmp`` turd that ``latest_step`` must never report, and any
+    step it does report must restore completely."""
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    tree = {"h": jnp.arange(12.0).reshape(3, 4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    with faults.fault("ckpt.torn_write", stage="pre_rename", times=1):
+        with pytest.raises(faults.FaultInjected):
+            save_checkpoint(str(tmp_path), 2, {"h": jnp.ones((3, 4))})
+    import os
+    assert os.path.isdir(tmp_path / "step_00000002.tmp")  # the torn write
+    assert latest_step(str(tmp_path)) == 1  # never the torn step
+    _, loaded = restore_checkpoint(str(tmp_path), tree)
+    assert bool(jnp.all(loaded["h"] == tree["h"]))
+
+
+def test_online_corrupt_row_rejected_by_ingest_fence():
+    """``online.corrupt_row`` poisons an appended batch upstream of the
+    always-on finite-input fence: the append raises, the store and the
+    accumulators are untouched, and the next clean append succeeds."""
+    from repro.api import OnlineFalkon
+
+    x, y = _online_data(n=1200)
+    of = OnlineFalkon(KERN, x[:48], 1e-3, x=x[:800], y=y[:800], chunk=256)
+    h0, b0 = of._h, of._b
+    with faults.fault("online.corrupt_row", row=2):
+        with pytest.raises(health.NonFiniteError):
+            of.append(x[800:900], y[800:900])
+    assert of.counters["rejected"] == 1 and of.counters["appends"] == 0
+    assert of.store.shape[0] == 800
+    assert bool(jnp.all(of._h == h0)) and bool(jnp.all(of._b == b0))
+    assert health.events("online_append_rejected")
+    of.append(x[800:900], y[800:900])  # disarmed: clean batch lands
+    assert of.counters["appends"] == 1
+
+
+def test_swap_under_poisson_load_zero_dropped_zero_misrouted(model):
+    """Hot-swap the model mid-storm under virtual-clock Poisson arrivals
+    with waves in flight: every clean request completes (zero dropped /
+    failed), and every result matches exactly the model generation its
+    request was tagged with — no wave ever mixes generations."""
+    key = jax.random.PRNGKey(9)
+    x2 = jax.random.normal(key, (300, 5))
+    m2 = falkon_fit(KERN, x2, jnp.cos(x2[:, 0]), x2[:40], 1e-3, iters=12,
+                    backend="jnp")
+    clk = faults.VirtualClock()
+    # no queue cap / deadline: nothing may be shed or expired — every
+    # request must be DONE for the scenario to count as zero-downtime
+    srv = AsyncKrrServer(model, clock=clk,
+                         config=ServeConfig(min_bucket=16, max_wave=32,
+                                            max_inflight=2))
+    rng = np.random.default_rng(1)
+    arrivals = np.cumsum(rng.exponential(0.01, size=80))
+    reqs = _reqs([(s, int(r)) for s, r in
+                  zip(range(80), rng.integers(1, 9, size=80))])
+    swapped = False
+    with faults.fault("dispatch.latency", seconds=0.05, advance=clk.advance):
+        i = 0
+        while i < len(arrivals) or srv._queue or srv._inflight:
+            while i < len(arrivals) and arrivals[i] <= clk():
+                srv.submit(reqs[i])
+                i += 1
+            if i >= 40 and not swapped:
+                assert srv.swap_model(m2)  # mid-storm, waves in flight
+                swapped = True
+            if not srv.step() and i < len(arrivals):
+                clk.advance(max(0.0, arrivals[i] - clk()))
+    assert swapped and srv.stats["swaps"] == 1
+    by_version = {0: model, 1: m2}
+    versions_seen = set()
+    for rid in range(len(reqs)):
+        req = srv._requests[rid]
+        assert req.status == RequestStatus.DONE  # zero dropped/failed
+        versions_seen.add(req.model_version)
+        np.testing.assert_allclose(        # zero misrouted: result matches
+            np.asarray(req.result),        # its tagged generation exactly
+            np.asarray(by_version[req.model_version].predict(reqs[rid])),
+            rtol=1e-6, atol=1e-6)
+    assert versions_seen == {0, 1}  # both generations actually served
+
+
+def test_poisoned_refresh_cannot_reach_traffic(model):
+    """The full online loop under chaos: a refit gone NaN is rejected at
+    the swap probe, the incumbent keeps serving, and a later healthy refit
+    swaps in cleanly."""
+    import dataclasses
+
+    srv = AsyncKrrServer(model, config=ServeConfig(min_bucket=16))
+    poisoned = dataclasses.replace(model,
+                                   alpha=model.alpha.at[3].set(jnp.nan))
+    assert not srv.swap_model(poisoned)
+    q = _reqs([(7, 8)])[0]
+    rid = srv.submit(q)
+    srv.run_until_idle()
+    assert srv.status(rid) == RequestStatus.DONE
+    assert srv._requests[rid].model_version == 0
+    assert srv.stats["swaps_rejected"] == 1
+    healthy = dataclasses.replace(model, alpha=model.alpha * 0.5)
+    assert srv.swap_model(healthy)
+    assert srv.stats["model_version"] == 1

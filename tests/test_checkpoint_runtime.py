@@ -37,6 +37,74 @@ def test_latest_step_ignores_tmp(tmp_path):
     assert latest_step(str(tmp_path)) == 3
 
 
+def test_bf16_manifest_records_uint16_view_and_restores_true_bf16(tmp_path):
+    """bf16 round-trip lockdown: the manifest records BOTH the logical
+    dtype and the on-disk uint16 view, and restore hands back true bf16
+    (not a raw uint16 view) with bit-identical payload."""
+    import json
+
+    import ml_dtypes
+
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    with open(tmp_path / "step_00000001" / "manifest.json") as f:
+        manifest = json.load(f)
+    rec = manifest["leaves"]["b/c"]
+    assert rec["dtype"] == "bfloat16" and rec["stored_dtype"] == "uint16"
+    fp32 = manifest["leaves"]["a"]
+    assert fp32["dtype"] == fp32["stored_dtype"] == "float32"
+    _, t2 = restore_checkpoint(str(tmp_path), t)
+    assert t2["b"]["c"].dtype == ml_dtypes.bfloat16
+    assert bool(jnp.all(t2["b"]["c"] == t["b"]["c"]))
+
+
+def test_restore_refuses_tampered_leaf_dtype(tmp_path):
+    """A leaf whose on-disk dtype disagrees with the recorded stored_dtype
+    (bit rot, incompatible writer) is refused, never reinterpreted."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    path = tmp_path / "step_00000001"
+    import json
+
+    with open(path / "manifest.json") as f:
+        manifest = json.load(f)
+    fname = manifest["leaves"]["b/c"]["file"]  # the bf16-as-uint16 leaf
+    np.save(path / fname, np.load(path / fname).astype(np.float64))
+    with pytest.raises(ValueError, match="stored_dtype"):
+        restore_checkpoint(str(tmp_path), _tree())
+
+
+def test_crash_window_property_every_stage_leaves_loadable_state(tmp_path):
+    """Kill save_checkpoint at EVERY filesystem step: whatever step dies,
+    ``latest_step`` only ever sees a complete, restorable checkpoint.
+
+    A ``times=0`` fault is a pure hit counter — one armed pass enumerates
+    the crash stages; then each stage k is killed via ``skip=k, times=1``.
+    """
+    from repro.testing import faults
+
+    base = _tree()
+    save_checkpoint(str(tmp_path), 1, base)  # the survivor checkpoint
+    with faults.fault("ckpt.torn_write", times=0) as probe:
+        save_checkpoint(str(tmp_path), 2, base)
+    n_stages = probe.seen
+    # tmp dir + one per leaf + pre/post rename (CRASH_STAGES contract)
+    assert n_stages == len(jax.tree.leaves(base)) + 3
+    for k in range(n_stages):
+        ckdir = tmp_path / f"kill_{k}"
+        os.makedirs(ckdir)
+        save_checkpoint(str(ckdir), 1, base)
+        tree2 = {"a": jnp.full((2, 3), 9.0), "b": base["b"]}
+        with faults.fault("ckpt.torn_write", times=1, skip=k):
+            with pytest.raises(faults.FaultInjected):
+                save_checkpoint(str(ckdir), 2, tree2)
+        step = latest_step(str(ckdir))
+        assert step in (1, 2)  # whatever survived must be complete:
+        _, loaded = restore_checkpoint(str(ckdir), base)
+        want = base if step == 1 else tree2
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(loaded)):
+            assert a.dtype == b.dtype and bool(jnp.all(a == b))
+
+
 def test_async_checkpointer_gc(tmp_path):
     ck = AsyncCheckpointer(str(tmp_path), keep=2)
     for s in (1, 2, 3, 4):

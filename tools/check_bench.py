@@ -130,6 +130,27 @@ def compare(
     return ok, lines
 
 
+def check_online_speedup(
+    current: dict[str, float], min_speedup: float,
+) -> tuple[bool, list[str]]:
+    """Gate the durable-online-FALKON promise: a warm ``refit()`` after an
+    append must beat a cold from-scratch fit on the same rows by at least
+    ``min_speedup`` (absolute within one JSON, so runner speed cancels)."""
+    cold = current.get("online.cold_refit")
+    warm = current.get("online.warm_refit")
+    if cold is None or warm is None:
+        return False, ["FAIL: online-min-speedup gate needs both "
+                       "online.cold_refit and online.warm_refit rows "
+                       "(run benchmarks/run.py --only online)"]
+    speedup = cold / warm
+    line = (f"online warm-refit speedup: {speedup:.1f}x "
+            f"(cold {cold:.0f}us / warm {warm:.0f}us, min {min_speedup:g}x)")
+    if speedup < min_speedup:
+        return False, [line, f"FAIL: warm refit only {speedup:.1f}x faster "
+                             f"than cold (< {min_speedup:g}x)"]
+    return True, [line]
+
+
 def main(argv: list[str] | None = None) -> int:
     """CLI entry point; returns the process exit code."""
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
@@ -148,13 +169,23 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--abs-floor-us", type=float, default=5000.0)
     ap.add_argument("--report", default=None,
                     help="also write the report to this path (CI artifact)")
+    ap.add_argument("--online-min-speedup", type=float, default=0.0,
+                    help="if > 0, additionally require the current JSON's "
+                         "online.cold_refit / online.warm_refit ratio to be "
+                         "at least this (the durable-online-FALKON promise; "
+                         "absolute, baseline-independent)")
     args = ap.parse_args(argv)
 
     baseline_path = args.baseline or find_baseline(args.root, smoke=args.smoke)
+    current_rows = load_rows(args.current)
     ok, lines = compare(
-        load_rows(args.current), load_rows(baseline_path),
+        current_rows, load_rows(baseline_path),
         mode=args.mode, median_max=args.median_max, row_max=args.row_max,
         abs_floor_us=args.abs_floor_us)
+    if args.online_min_speedup > 0:
+        ok2, lines2 = check_online_speedup(current_rows,
+                                           args.online_min_speedup)
+        ok, lines = ok and ok2, lines + lines2
     report = "\n".join([f"baseline: {baseline_path}", *lines])
     print(report)
     if args.report:
